@@ -1,0 +1,83 @@
+"""Paper Fig. 12: heterogeneous HeterPS vs single-resource-type execution.
+
+Two measurements:
+1. Cost-model throughput of CTRDNN under HeterPS-CPU / HeterPS-GPU /
+   HeterPS (RL heterogeneous plan) — the paper's simulated comparison
+   (TF baselines are out of scope; HeterPS-CPU/GPU stand in for the
+   single-type configurations).
+2. A real wall-clock microbenchmark of the shard_map pipeline runtime:
+   pipelined vs sequential execution of the same staged MLP (single CPU
+   device — measures schedule overhead; the speedup claim needs multiple
+   real devices and is validated structurally in tests/test_pipeline.py).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, fmt_cost
+from repro.core import (
+    SchedulingPlan, TrainingJob, build_stages, default_fleet,
+    paper_model_profiles, pipeline_throughput,
+)
+from repro.core.provision import provision
+from repro.core.schedulers import RLScheduler
+from repro.parallel.pipeline import make_stage_mesh, pipeline_apply, stack_stage_params
+
+FLEET = default_fleet()
+
+
+def run() -> None:
+    # --- 1. cost-model throughput, CTRDNN1 (low dim) / CTRDNN2 (paper) ---
+    for tag, tp_limit in (("CTRDNN1", 100_000.0), ("CTRDNN2", 200_000.0)):
+        job = TrainingJob(throughput_limit=tp_limit)
+        profs = paper_model_profiles("CTRDNN", FLEET)
+        plans = {
+            "HeterPS-CPU": SchedulingPlan((0,) * len(profs)),
+            "HeterPS-GPU": SchedulingPlan((1,) * len(profs)),
+            "HeterPS": RLScheduler(rounds=40, seed=0)
+            .schedule(profs, FLEET, job).plan,
+        }
+        base_tp = None
+        for name, plan in plans.items():
+            stages = build_stages(plan, profs, FLEET)
+            prov = provision(stages, FLEET, job)
+            tp = (pipeline_throughput(stages, prov, job.batch_size)
+                  if prov else 0.0)
+            if name == "HeterPS-CPU":
+                base_tp = max(tp, 1e-9)
+            emit(f"fig12/{tag}/{name}", 0.0,
+                 f"throughput={tp:,.0f};x_over_cpu={tp / base_tp:.1f}")
+
+    # --- 2. pipeline runtime microbenchmark (schedule overhead) ----------
+    d, M, mb, S = 64, 8, 32, min(4, jax.device_count())
+    key = jax.random.PRNGKey(0)
+    params = stack_stage_params([
+        {"w": jax.random.normal(jax.random.fold_in(key, i), (d, d)) * 0.3,
+         "b": jnp.zeros((d,))}
+        for i in range(S)
+    ])
+    xs = jax.random.normal(key, (M, mb, d))
+    stage_fn = lambda p, x: jnp.tanh(x @ p["w"] + p["b"])
+    mesh = make_stage_mesh(S)
+    piped = jax.jit(lambda prm, x: pipeline_apply(stage_fn, prm, x, mesh))
+
+    def seq(prm, x):
+        h = x
+        for i in range(S):
+            p = jax.tree.map(lambda a: a[i], prm)
+            h = jax.vmap(lambda xx: stage_fn(p, xx))(h)
+        return h
+
+    seqj = jax.jit(seq)
+    piped(params, xs).block_until_ready()
+    seqj(params, xs).block_until_ready()
+    for name, fn in (("pipelined", piped), ("sequential", seqj)):
+        t0 = time.perf_counter()
+        for _ in range(20):
+            fn(params, xs).block_until_ready()
+        us = (time.perf_counter() - t0) / 20 * 1e6
+        emit(f"fig12/microbench/{name}", us, f"stages={S};micro={M}")

@@ -1,0 +1,34 @@
+"""Paper Fig. 4: our load-balancing + Newton provisioning vs the static
+StaRatio (1:6) and StaPSRatio (1:6:6) heuristics, over several throughput
+limits (the figure's x-axis)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, fmt_cost, timed
+from repro.core import (
+    SchedulingPlan, TrainingJob, build_stages, default_fleet, monetary_cost,
+    paper_model_profiles,
+)
+from repro.core.provision import provision, provision_sta_ratio
+from repro.core.schedulers import RLScheduler
+
+FLEET = default_fleet()
+
+
+def run() -> None:
+    profs = paper_model_profiles("CTRDNN", FLEET)
+    for limit in (100_000.0, 200_000.0, 400_000.0):
+        job = TrainingJob(throughput_limit=limit)
+        plan = RLScheduler(rounds=40, seed=0).schedule(profs, FLEET, job).plan
+        stages = build_stages(plan, profs, FLEET)
+
+        ours, us = timed(provision, stages, FLEET, job)
+        c_ours = monetary_cost(plan, ours, profs, FLEET, job) if ours else float("inf")
+        emit(f"fig4/ours/tp{limit:.0f}", us, f"cost={fmt_cost(c_ours)}")
+        for name, with_ps in (("StaRatio", False), ("StaPSRatio", True)):
+            sta, us = timed(provision_sta_ratio, stages, FLEET, job,
+                            with_ps=with_ps)
+            c = (monetary_cost(plan, sta, profs, FLEET, job)
+                 if sta else float("inf"))
+            rel = f";vs_ours={c / c_ours:.3f}" if c_ours and c == c else ""
+            emit(f"fig4/{name}/tp{limit:.0f}", us, f"cost={fmt_cost(c)}{rel}")

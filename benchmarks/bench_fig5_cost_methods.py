@@ -1,0 +1,41 @@
+"""Paper Figs. 5–6: monetary cost per scheduling method on MATCHNET, with
+growing numbers of resource types (2 → 8 → 32; the paper's claim: RL's
+advantage widens as the fleet gets more heterogeneous).  Fig. 6's
+"without CPU" variant drops the CPU from the fleet."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, fmt_cost
+from repro.core import TrainingJob, default_fleet, make_fleet, paper_model_profiles
+from repro.core.schedulers import ALL_SCHEDULERS
+
+JOB = TrainingJob()
+METHODS = ("RL-LSTM", "RL-RNN", "BO", "Genetic", "Greedy", "GPU", "CPU",
+           "Heuristic")
+
+
+def run() -> None:
+    for T in (2, 8, 32):
+        fleet = default_fleet() if T == 2 else make_fleet(T)
+        profs = paper_model_profiles("MATCHNET", fleet)
+        costs = {}
+        for name in METHODS:
+            kw = {"rounds": 50} if name.startswith("RL") else {}
+            r = ALL_SCHEDULERS[name](**kw).schedule(profs, fleet, JOB)
+            costs[name] = r.cost
+            emit(f"fig5/T{T}/{name}", r.wall_time_s * 1e6,
+                 f"cost={fmt_cost(r.cost)}")
+        rl = costs["RL-LSTM"]
+        worst = max((v for v in costs.values() if v == v and v != float("inf")),
+                    default=rl)
+        emit(f"fig5/T{T}/RL_advantage", 0.0,
+             f"best_baseline_over_rl={min(v for k, v in costs.items() if k != 'RL-LSTM') / rl:.3f};worst_over_rl={worst / rl:.3f}")
+
+    # Fig. 6: accelerator-only fleet (no CPU type)
+    fleet = make_fleet(4)[1:]
+    profs = paper_model_profiles("MATCHNET", fleet)
+    for name in ("RL-LSTM", "BO", "Genetic", "Greedy", "GPU", "Heuristic"):
+        kw = {"rounds": 50} if name.startswith("RL") else {}
+        r = ALL_SCHEDULERS[name](**kw).schedule(profs, fleet, JOB)
+        emit(f"fig6/noCPU/{name}", r.wall_time_s * 1e6,
+             f"cost={fmt_cost(r.cost)}")

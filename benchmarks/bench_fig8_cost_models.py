@@ -1,0 +1,36 @@
+"""Paper Figs. 8–10: cost (and throughput-constraint satisfaction) per
+scheduling method across the four paper models — RL-LSTM should win or
+tie everywhere; CPU fails the constraint for CTRDNN (Fig. 10)."""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit, fmt_cost
+from repro.core import (
+    TrainingJob, build_stages, default_fleet, paper_model_profiles,
+    pipeline_throughput,
+)
+from repro.core.schedulers import ALL_SCHEDULERS
+
+JOB = TrainingJob()
+FLEET = default_fleet()
+METHODS = ("RL-LSTM", "RL-RNN", "BO", "Genetic", "Greedy", "GPU", "CPU",
+           "Heuristic")
+
+
+def run() -> None:
+    for model in ("MATCHNET", "CTRDNN", "2EMB", "NCE"):
+        profs = paper_model_profiles(model, FLEET)
+        for name in METHODS:
+            kw = {"rounds": 50} if name.startswith("RL") else {}
+            r = ALL_SCHEDULERS[name](**kw).schedule(profs, FLEET, JOB)
+            # Fig. 7/10 companion: normalized throughput (≥1 = meets limit)
+            if r.prov is not None:
+                stages = build_stages(r.plan, profs, FLEET)
+                tp = pipeline_throughput(stages, r.prov, JOB.batch_size)
+                norm_tp = tp / JOB.throughput_limit
+            else:
+                norm_tp = 0.0  # constraint not satisfiable (paper Fig. 10 CPU)
+            emit(f"fig8/{model}/{name}", r.wall_time_s * 1e6,
+                 f"cost={fmt_cost(r.cost)};norm_tp={norm_tp:.2f}")

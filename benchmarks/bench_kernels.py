@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: XLA reference wall time per shape + interpret-
+mode max-abs error of the Pallas kernel vs the oracle (real-TPU timing is
+out of scope on this CPU container; the error column proves correctness)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.flash_attention import flash_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> None:
+    for B, H, S, hd in ((1, 4, 512, 64), (2, 8, 1024, 128)):
+        q = jax.random.normal(KEY, (B, H, S, hd))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, S, hd))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, H, S, hd))
+        fn = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c, causal=True))
+        fn(q, k, v).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            fn(q, k, v).block_until_ready()
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        err = float(jnp.abs(
+            flash_attention(q, k, v, causal=True, interpret=True)
+            - ref.flash_attention_ref(q, k, v, causal=True)
+        ).max())
+        emit(f"kernel/flash_attn/B{B}H{H}S{S}hd{hd}", us, f"maxerr={err:.2e}")
+
+    for N, bag, V, dim in ((64, 16, 10_000, 128), (256, 26, 100_000, 128)):
+        ids = jax.random.randint(KEY, (N, bag), 0, V)
+        table = jax.random.normal(KEY, (V, dim))
+        fn = jax.jit(ref.embedding_bag_ref)
+        fn(ids, table).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            fn(ids, table).block_until_ready()
+        us = (time.perf_counter() - t0) / 10 * 1e6
+        err = float(jnp.abs(embedding_bag(ids, table, interpret=True)
+                            - ref.embedding_bag_ref(ids, table)).max())
+        emit(f"kernel/embedding_bag/N{N}bag{bag}", us, f"maxerr={err:.2e}")

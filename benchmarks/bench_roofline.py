@@ -1,0 +1,91 @@
+"""Roofline table (deliverable g): per (arch × shape), the three roofline
+terms from the compiled single-pod dry-run + MODEL_FLOPS/HLO_FLOPs ratio.
+
+Reads results/dryrun_single_pod.json (produced by
+``python -m repro.launch.dryrun --all --out results/dryrun_single_pod.json``);
+rows marked missing if the dry-run artifact isn't present.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.launch.specs import SHAPES
+from repro.roofline import model_flops
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_single_pod.json")
+
+
+def active_params(cfg) -> tuple[float, float]:
+    """(total, active) params — active counts top_k/E of expert weights."""
+    from repro.launch.specs import param_templates
+
+    params_t, _ = param_templates(cfg)
+    total = 0.0
+    expert = 0.0
+
+    def visit(path, leaf):
+        nonlocal total, expert
+        n = float(np.prod(leaf.shape))
+        total += n
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if leaf.ndim == 4 and "ffn" in names:  # stacked (R, E, …) experts
+            expert += n
+
+    jax.tree_util.tree_map_with_path(visit, params_t)
+    active = total - expert
+    if cfg.has_moe and cfg.moe_experts:
+        active += expert * cfg.moe_top_k / cfg.moe_experts
+    return total, active
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline/missing", 0.0, f"run dryrun --all first ({RESULTS})")
+        return
+    with open(RESULTS) as f:
+        records = json.load(f)
+    for rec in records:
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec["status"] == "skipped":
+            emit(name, 0.0, "skipped:" + rec["reason"][:40])
+            continue
+        if rec["status"] != "ok":
+            emit(name, 0.0, "FAILED")
+            continue
+        from repro.roofline import PEAK_FLOPS, roofline_terms
+
+        # raw (single-counted-loop) basis — matches render_roofline and
+        # the EXPERIMENTS.md table; corrected compute floor separate.
+        r = roofline_terms(
+            flops=rec["cost"]["flops"],
+            hbm_bytes=rec["cost"]["bytes_accessed"],
+            collective_bytes=rec["collectives"]["total_bytes"],
+        )
+        corr = rec.get("scan_correction", 1)
+        compute_corr = rec["cost"]["flops"] * corr / PEAK_FLOPS
+        dom = r["dominant"]
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            total, active = active_params(cfg)
+            mf = model_flops(active, tokens)  # fwd+bwd 6·N·D
+            hlo_total = rec["cost"]["flops"] * corr * rec["num_devices"]
+            ratio = mf / hlo_total if hlo_total else 0.0
+        else:
+            ratio = float("nan")
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(name, step_s * 1e6,
+             f"dom={dom};compute_s={r['compute_s']:.4g};"
+             f"memory_s={r['memory_s']:.4g};collective_s={r['collective_s']:.4g};"
+             f"true_compute_s={compute_corr:.4g};"
+             f"model_flops_ratio={ratio:.3f};"
+             f"mem_gib={rec['memory']['peak_bytes_per_device'] / 2**30:.2f}")

@@ -1,0 +1,38 @@
+"""Paper Table 2: Brute Force vs RL — scheduling time and plan quality as
+the layer count grows (CTRDNN variants: 8/12/16 layers) and with more
+resource types (BF(2) vs BF(4)).  BF time explodes exponentially; RL stays
+flat and matches the BF optimum."""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit, fmt_cost
+from repro.core import TrainingJob, default_fleet, make_fleet
+from repro.core.profiles import ctrdnn_variant, profile_layers
+from repro.core.schedulers import BruteForceScheduler, RLScheduler
+
+JOB = TrainingJob()
+
+
+def run() -> None:
+    for T, layer_counts in ((2, (8, 12, 16)), (4, (8,))):
+        fleet = default_fleet() if T == 2 else make_fleet(T)
+        for L in layer_counts:
+            profs = profile_layers(ctrdnn_variant(L), fleet)
+            bf = BruteForceScheduler(max_evals=300_000).schedule(profs, fleet, JOB)
+            rl = RLScheduler(rounds=60, seed=0).schedule(profs, fleet, JOB)
+            match = (
+                "match" if rl.cost <= bf.cost * 1.02 else
+                f"gap={rl.cost / bf.cost:.3f}"
+            )
+            emit(f"table2/BF({T})/L{L}", bf.wall_time_s * 1e6,
+                 f"cost={fmt_cost(bf.cost)};evals={bf.evaluations}")
+            emit(f"table2/RL({T})/L{L}", rl.wall_time_s * 1e6,
+                 f"cost={fmt_cost(rl.cost)};{match}")
+        # estimated BF time for the next sizes (paper marks these "E")
+        if T == 4:
+            per_eval_us = bf.wall_time_s * 1e6 / bf.evaluations
+            for L in (12, 16):
+                emit(f"table2/BF({T})/L{L}(E)", per_eval_us * (T**L),
+                     "estimated")

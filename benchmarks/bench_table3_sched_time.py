@@ -1,0 +1,27 @@
+"""Paper Table 3: scheduling time per method per model (MATCHNET, CTRDNN,
+2EMB, NCE; plus MATCHNET with 32 resource types) — RL-LSTM's time does not
+grow with the number of resource types."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, fmt_cost
+from repro.core import TrainingJob, default_fleet, make_fleet, paper_model_profiles
+from repro.core.schedulers import ALL_SCHEDULERS
+
+JOB = TrainingJob()
+METHODS = ("RL-LSTM", "RL-RNN", "BO", "Genetic", "Greedy", "GPU", "CPU",
+           "Heuristic")
+
+
+def run() -> None:
+    cases = [(m, default_fleet(), "") for m in
+             ("MATCHNET", "CTRDNN", "2EMB", "NCE")]
+    cases.append(("MATCHNET", make_fleet(32), "(32)"))
+    for model, fleet, tag in cases:
+        profs = paper_model_profiles(model, fleet)
+        for name in METHODS:
+            kw = {"rounds": 40} if name.startswith("RL") else {}
+            sched = ALL_SCHEDULERS[name](**kw)
+            r = sched.schedule(profs, fleet, JOB)
+            emit(f"table3/{model}{tag}/{name}", r.wall_time_s * 1e6,
+                 f"cost={fmt_cost(r.cost)}")

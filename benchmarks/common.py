@@ -1,0 +1,24 @@
+"""Shared benchmark helpers: CSV emission + standard fleet/job setup."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    """The run.py contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def fmt_cost(c: float) -> str:
+    import math
+
+    return f"{c:.3f}" if math.isfinite(c) else "infeasible"

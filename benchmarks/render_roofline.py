@@ -1,0 +1,60 @@
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.render_roofline [results/dryrun_single_pod.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        records = json.load(f)
+    from repro.roofline import PEAK_FLOPS, roofline_terms
+
+    out = []
+    out.append("| arch | shape | mem/dev GiB | HLO GFLOP/dev | HBM GB/dev | "
+               "coll MB/dev | compute ms | memory ms | coll ms | dominant | "
+               "true-compute ms | collectives |")
+    out.append("|---|---|---:|---:|---:|---:|---:|---:|---:|---|---:|---|")
+    for r in records:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — "
+                       f"| — | skipped | — | {r['reason'][:45]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | | | |")
+            continue
+        # recompute terms on the raw (uncorrected) basis so old/new JSON
+        # render identically; corrected compute floor shown separately.
+        rf = roofline_terms(
+            flops=r["cost"]["flops"],
+            hbm_bytes=r["cost"]["bytes_accessed"],
+            collective_bytes=r["collectives"]["total_bytes"],
+        )
+        corr = r["cost"]["flops"] * r.get("scan_correction", 1) / PEAK_FLOPS
+        coll = r["collectives"]
+        kinds = ",".join(f"{k.split('-')[-1][:4]}:{v}"
+                         for k, v in sorted(coll["counts"].items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['peak_bytes_per_device'] / 2**30:.2f} "
+            f"| {r['cost']['flops'] / 1e9:.1f} "
+            f"| {r['cost']['bytes_accessed'] / 1e9:.1f} "
+            f"| {coll['total_bytes'] / 2**20:.1f} "
+            f"| {rf['compute_s'] * 1e3:.2f} "
+            f"| {rf['memory_s'] * 1e3:.2f} "
+            f"| {rf['collective_s'] * 1e3:.2f} "
+            f"| **{rf['dominant']}** "
+            f"| {corr * 1e3:.1f} "
+            f"| {kinds} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single_pod.json"
+    print(render(path))

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run [--only table2,fig4,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("table2", "benchmarks.bench_table2_bf_vs_rl"),
+    ("table3", "benchmarks.bench_table3_sched_time"),
+    ("fig4", "benchmarks.bench_fig4_provisioning"),
+    ("fig5", "benchmarks.bench_fig5_cost_methods"),
+    ("fig8", "benchmarks.bench_fig8_cost_models"),
+    ("fig12", "benchmarks.bench_fig12_pipeline"),
+    ("roofline", "benchmarks.bench_roofline"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in SUITES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+
+            mod = importlib.import_module(module)
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched serving example: prefill + KV-cache decode on assigned archs.
+
+Exercises the three cache families: full attention KV (llama3.2-1b),
+sliding-window ring buffer (gemma2-2b), and recurrent state (rwkv6-7b) —
+the long-context decode story of DESIGN.md.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    for arch in ("llama3.2-1b", "gemma2-2b", "rwkv6-7b", "jamba-v0.1-52b"):
+        out = serve(arch, reduced=True, batch=4, prompt_len=16, gen=16)
+        print(f"{arch:20s} gen={out['generated_shape']} "
+              f"vocab-valid={out['tokens_in_vocab']} "
+              f"decode {out['decode_tok_per_s']:7.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

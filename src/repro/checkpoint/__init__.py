@@ -1,0 +1,5 @@
+"""Pytree checkpointing (.npz + JSON manifest)."""
+
+from repro.checkpoint.io import load_checkpoint, save_checkpoint
+
+__all__ = ["load_checkpoint", "save_checkpoint"]

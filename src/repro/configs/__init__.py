@@ -1,0 +1,45 @@
+"""Assigned-architecture configs (``--arch <id>``) + the paper's CTR models.
+
+Each module exports ``config()`` (the exact assigned full-size config) and
+``reduced()`` (a ≤2-layer, d_model≤512, ≤4-expert variant of the same
+family for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "jamba-v0.1-52b",
+    "rwkv6-7b",
+    "chatglm3-6b",
+    "olmoe-1b-7b",
+    "gemma2-2b",
+    "internlm2-20b",
+    "whisper-large-v3",
+    "llama3.2-1b",
+    "qwen3-moe-30b-a3b",
+    "llama-3.2-vision-11b",
+)
+
+_MODULES = {
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "rwkv6-7b": "rwkv6_7b",
+    "chatglm3-6b": "chatglm3_6b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "gemma2-2b": "gemma2_2b",
+    "internlm2-20b": "internlm2_20b",
+    "whisper-large-v3": "whisper_large_v3",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+}
+
+
+def get_config(arch_id: str, *, reduced: bool = False):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    cfg = mod.reduced() if reduced else mod.config()
+    cfg.validate()
+    return cfg

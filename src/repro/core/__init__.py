@@ -1,0 +1,36 @@
+"""HeterPS core: cost model, scheduling plans, provisioning, RL scheduler."""
+
+from repro.core.cost_model import (
+    INFEASIBLE,
+    TrainingJob,
+    monetary_cost,
+    pipeline_throughput,
+    plan_cost,
+)
+from repro.core.plan import ProvisioningPlan, SchedulingPlan, Stage, build_stages
+from repro.core.profiles import (
+    B_O,
+    LAYER_KINDS,
+    LayerProfile,
+    PAPER_MODELS,
+    paper_model_profiles,
+    profile_layers,
+)
+from repro.core.provision import provision, provision_sta_ratio
+from repro.core.resources import (
+    CPU_CORE,
+    TPU_V5E,
+    V100,
+    ResourceType,
+    default_fleet,
+    make_fleet,
+)
+
+__all__ = [
+    "INFEASIBLE", "TrainingJob", "monetary_cost", "pipeline_throughput",
+    "plan_cost", "ProvisioningPlan", "SchedulingPlan", "Stage",
+    "build_stages", "B_O", "LAYER_KINDS", "LayerProfile", "PAPER_MODELS",
+    "paper_model_profiles", "profile_layers", "provision",
+    "provision_sta_ratio", "CPU_CORE", "TPU_V5E", "V100", "ResourceType",
+    "default_fleet", "make_fleet",
+]

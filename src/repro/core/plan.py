@@ -1,0 +1,112 @@
+"""Scheduling & provisioning plans (HeterPS §4.2, §5.1).
+
+A *scheduling plan* assigns each layer to one resource type (the paper's
+``Schedule(l, t)`` 0/1 matrix — we store the equivalent dense vector of
+type indices).  Consecutive layers on the same type fuse into a *stage*;
+a *provisioning plan* assigns each stage its replica count ``k_i``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.profiles import LayerProfile
+from repro.core.resources import ResourceType
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulingPlan:
+    """``assignment[l] = t`` — Layer ``l`` runs on resource Type ``t``."""
+
+    assignment: tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "assignment", tuple(int(a) for a in self.assignment))
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.assignment)
+
+    def stage_boundaries(self) -> list[tuple[int, int, int]]:
+        """Fuse consecutive same-type layers: list of (start, end, type)."""
+        out: list[tuple[int, int, int]] = []
+        start = 0
+        for i in range(1, len(self.assignment) + 1):
+            if i == len(self.assignment) or self.assignment[i] != self.assignment[start]:
+                out.append((start, i, self.assignment[start]))
+                start = i
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One pipeline stage: fused consecutive layers on one resource type.
+
+    ``oct``/``odt`` are the stage's aggregate original computation /
+    communication times for a ``B_o`` batch on ONE unit of its type
+    (paper §4.1): computation sums over the fused layers; communication is
+    the boundary activation hand-off plus the per-layer parameter sync.
+    """
+
+    index: int
+    layer_range: tuple[int, int]
+    resource_type: int
+    oct: float
+    odt: float
+    alpha: float
+    beta: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ProvisioningPlan:
+    """``k[i]`` replicas for stage ``i`` (+ optional PS cores, §5.1)."""
+
+    k: tuple[int, ...]
+    ps_cores: int = 0
+
+
+def build_stages(
+    plan: SchedulingPlan,
+    profiles: Sequence[LayerProfile],
+    fleet: Sequence[ResourceType],
+) -> list[Stage]:
+    """Fuse layers into stages and aggregate OCT/ODT (paper §4.1)."""
+    assert len(profiles) == plan.num_layers
+    stages = []
+    bounds = plan.stage_boundaries()
+    for si, (s, e, t) in enumerate(bounds):
+        layers = profiles[s:e]
+        oct_ = sum(p.oct[t] for p in layers)
+        # Communication = per-layer parameter/gradient sync for every fused
+        # layer, plus the activation hand-off to the next stage for the
+        # LAST layer only — interior activations stay on-device inside a
+        # stage (this is why fusing consecutive layers "reduces the time
+        # to transfer data", paper §1).
+        odt_ = sum(p.odt_sync[t] for p in layers)
+        odt_ += layers[-1].odt_act[t]
+        # Amdahl fractions: OCT-weighted average over fused layers.
+        w = max(oct_, 1e-30)
+        alpha = sum(p.alpha * p.oct[t] for p in layers) / w
+        beta = sum(p.beta * p.oct[t] for p in layers) / max(
+            sum(p.oct[t] for p in layers), 1e-30
+        )
+        stages.append(
+            Stage(
+                index=si, layer_range=(s, e), resource_type=t,
+                oct=oct_, odt=odt_, alpha=alpha, beta=beta,
+            )
+        )
+    return stages
+
+
+def type_counts(
+    plan: SchedulingPlan, prov: ProvisioningPlan, num_types: int
+) -> list[int]:
+    """``k_t`` — total units of each type across stages (Formula 7)."""
+    counts = [0] * num_types
+    for (s, e, t), k in zip(plan.stage_boundaries(), prov.k):
+        counts[t] += k
+    # PS cores are CPU cores (type 0) in the paper's architecture.
+    counts[0] += prov.ps_cores
+    return counts

@@ -1,0 +1,198 @@
+"""Provisioning for load balance (HeterPS §5.1, Formulas 11–13).
+
+Given a scheduling plan's stages, choose replica counts ``k_i`` so that
+(a) every stage sustains the same throughput (no pipeline straggler),
+(b) the throughput constraint holds (Formula 13 lower-bounds ``k_1``),
+(c) monetary cost is minimized — a Newton iteration on the continuous
+relaxation of ``k_1`` (the paper uses Newton's method on ``k_1``), then
+integer rounding with a local feasibility search.
+
+Also provides the two static baselines of §6.1: ``StaRatio`` (GPU:CPU
+cores 1:6, AIBox default) and ``StaPSRatio`` (1:6 + 6 PS cores per GPU,
+BytePS-style).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+from repro.core.cost_model import (
+    TrainingJob,
+    stage_throughput,
+)
+from repro.core.plan import ProvisioningPlan, Stage
+from repro.core.profiles import B_O
+from repro.core.resources import ResourceType
+
+
+def required_k(stage: Stage, throughput: float, batch_size: int) -> float:
+    """Smallest continuous ``k`` giving ``stage`` at least ``throughput``.
+
+    Inverts Formulas 1–4: both the compute and the comm term must fit in
+    ``B/throughput`` seconds.  Returns ``inf`` when the sequential
+    (non-parallelizable) fraction alone exceeds the budget — no number of
+    replicas can reach that throughput (Amdahl ceiling).
+    """
+    budget = 1.0 / throughput  # seconds per example
+    ks = []
+    for time_per_ex, frac in ((stage.oct / B_O, stage.alpha), (stage.odt / B_O, stage.beta)):
+        if time_per_ex <= 0.0:
+            ks.append(0.0)
+            continue
+        slack = budget / time_per_ex - (1.0 - frac)
+        if slack <= 0.0:
+            return float("inf")
+        ks.append(frac / slack)
+    return max(max(ks), 1.0)
+
+
+def _balanced_k(
+    stages: Sequence[Stage], throughput: float, batch_size: int
+) -> list[float] | None:
+    """Formula 12 generalized: per-stage continuous ``k_i`` at equal throughput."""
+    ks = []
+    for s in stages:
+        k = required_k(s, throughput, batch_size)
+        if not math.isfinite(k):
+            return None
+        ks.append(k)
+    return ks
+
+
+def _ps_cores(stages: Sequence[Stage], k: Sequence[float]) -> int:
+    """CPU cores added for parameter servers (§5.1: "based on historical
+    profiling results") — the paper's default server ratio is ~1 PS core
+    per 6 accelerator units."""
+    n_accel = sum(kk for s, kk in zip(stages, k) if s.resource_type != 0)
+    return int(math.ceil(n_accel / 6.0)) if n_accel > 0 else 0
+
+
+def _cost_at_throughput(
+    stages: Sequence[Stage],
+    fleet: Sequence[ResourceType],
+    job: TrainingJob,
+    throughput: float,
+) -> tuple[float, list[float] | None]:
+    """Continuous-relaxation cost at a target throughput (load-balanced)."""
+    ks = _balanced_k(stages, throughput, job.batch_size)
+    if ks is None:
+        return float("inf"), None
+    rate = sum(
+        k * fleet[s.resource_type].price_per_sec for s, k in zip(stages, ks)
+    )
+    rate += _ps_cores(stages, ks) * fleet[0].price_per_sec
+    et = job.num_epochs * job.num_examples / throughput
+    return et * rate, ks
+
+
+def provision(
+    stages: Sequence[Stage],
+    fleet: Sequence[ResourceType],
+    job: TrainingJob,
+    *,
+    newton_iters: int = 25,
+) -> ProvisioningPlan | None:
+    """Generate a provisioning plan for ``stages`` (§5.1).
+
+    Newton's method on the continuous throughput target ``τ`` (equivalent
+    to the paper's iteration on ``k_1`` — ``τ`` and ``k_1`` are related
+    1:1 by Formula 12/13; optimizing τ directly avoids singling out
+    stage 1): minimize ``cost(τ)`` for ``τ ≥ throughput_limit``, then
+    round to integers and locally repair feasibility.
+
+    Returns ``None`` when no feasible provisioning exists (resource
+    limits, Formula 10).
+    """
+    tau_min = job.throughput_limit
+    c0, ks0 = _cost_at_throughput(stages, fleet, job, tau_min)
+    if ks0 is None:
+        return None
+
+    # Newton on f(τ) = d cost/d τ, seeking interior minima; cost(τ) is
+    # usually increasing past the constraint (paper §5.1 observes this),
+    # in which case Newton stays pinned at τ_min.
+    tau, best_tau, best_cost = tau_min, tau_min, c0
+    h = max(tau_min * 1e-4, 1e-9)
+    for _ in range(newton_iters):
+        cm, _ = _cost_at_throughput(stages, fleet, job, max(tau - h, tau_min))
+        cp, _ = _cost_at_throughput(stages, fleet, job, tau + h)
+        cc, _ = _cost_at_throughput(stages, fleet, job, tau)
+        if not (math.isfinite(cm) and math.isfinite(cp) and math.isfinite(cc)):
+            break
+        g = (cp - cm) / (2 * h)
+        hess = (cp - 2 * cc + cm) / (h * h)
+        if hess <= 0.0 or not math.isfinite(hess):
+            step = -math.copysign(0.1 * tau, g)
+        else:
+            step = -g / hess
+        new_tau = max(tau_min, tau + step)
+        c_new, _ = _cost_at_throughput(stages, fleet, job, new_tau)
+        if math.isfinite(c_new) and c_new < best_cost:
+            best_cost, best_tau = c_new, new_tau
+        if abs(new_tau - tau) < 1e-6 * tau_min:
+            tau = new_tau
+            break
+        tau = new_tau
+
+    _, ks = _cost_at_throughput(stages, fleet, job, best_tau)
+    if ks is None:
+        return None
+    k_int = [int(math.ceil(k)) for k in ks]
+
+    # Feasibility: per-type limits (Formula 10).
+    counts: dict[int, int] = {}
+    for s, k in zip(stages, k_int):
+        counts[s.resource_type] = counts.get(s.resource_type, 0) + k
+    ps = _ps_cores(stages, k_int)
+    counts[0] = counts.get(0, 0) + ps
+    for t, n in counts.items():
+        if n > fleet[t].max_count:
+            return None
+    # Throughput check with the integer k (ceil only raises throughput,
+    # so this should hold; guard against degenerate stages anyway).
+    tp = min(
+        stage_throughput(s, k, job.batch_size) for s, k in zip(stages, k_int)
+    )
+    if tp < job.throughput_limit:
+        return None
+    return ProvisioningPlan(k=tuple(k_int), ps_cores=ps)
+
+
+# --- static baselines (§6.1) -------------------------------------------------
+
+
+def provision_sta_ratio(
+    stages: Sequence[Stage],
+    fleet: Sequence[ResourceType],
+    job: TrainingJob,
+    *,
+    with_ps: bool = False,
+) -> ProvisioningPlan | None:
+    """StaRatio / StaPSRatio: per-stage minimum k to meet the throughput
+    limit *independently* (no load balancing), CPU stages sized at 6 cores
+    per accelerator unit (AIBox's 1:6 in-server ratio), plus 6 PS cores
+    per accelerator for StaPSRatio."""
+    n_accel = 0.0
+    k_int: list[int] = []
+    for s in stages:
+        k = required_k(s, job.throughput_limit, job.batch_size)
+        if not math.isfinite(k):
+            return None
+        k_int.append(int(math.ceil(k)))
+        if s.resource_type != 0:
+            n_accel += k_int[-1]
+    # force the static CPU:GPU ratio on CPU stages
+    if n_accel:
+        for i, s in enumerate(stages):
+            if s.resource_type == 0:
+                k_int[i] = max(k_int[i], int(math.ceil(6.0 * n_accel)))
+    ps = int(math.ceil(6.0 * n_accel)) if with_ps and n_accel else 0
+    counts: dict[int, int] = {}
+    for s, k in zip(stages, k_int):
+        counts[s.resource_type] = counts.get(s.resource_type, 0) + k
+    counts[0] = counts.get(0, 0) + ps
+    for t, n in counts.items():
+        if n > fleet[t].max_count:
+            return None
+    return ProvisioningPlan(k=tuple(k_int), ps_cores=ps)

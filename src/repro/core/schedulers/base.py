@@ -1,0 +1,109 @@
+"""Scheduler interface + shared evaluation (HeterPS §5.2, §6.2)."""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+import time
+from typing import Sequence
+
+from repro.core.cost_model import INFEASIBLE, TrainingJob, plan_cost
+from repro.core.plan import ProvisioningPlan, SchedulingPlan
+from repro.core.profiles import LayerProfile
+from repro.core.resources import ResourceType
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    plan: SchedulingPlan
+    prov: ProvisioningPlan | None
+    cost: float
+    wall_time_s: float
+    evaluations: int
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def feasible(self) -> bool:
+        return math.isfinite(self.cost)
+
+
+class Scheduler(abc.ABC):
+    """Maps (layer profiles, fleet, job) → a scheduling plan."""
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def _search(
+        self,
+        profiles: Sequence[LayerProfile],
+        fleet: Sequence[ResourceType],
+        job: TrainingJob,
+    ) -> tuple[SchedulingPlan, int, dict]:
+        """Return (best plan, #cost evaluations, extra info)."""
+
+    def schedule(
+        self,
+        profiles: Sequence[LayerProfile],
+        fleet: Sequence[ResourceType],
+        job: TrainingJob,
+    ) -> ScheduleResult:
+        t0 = time.perf_counter()
+        plan, evals, extra = self._search(profiles, fleet, job)
+        wall = time.perf_counter() - t0
+        cost, prov = plan_cost(plan, profiles, fleet, job)
+        return ScheduleResult(
+            plan=plan, prov=prov, cost=cost, wall_time_s=wall,
+            evaluations=evals, extra=extra,
+        )
+
+
+class CostCache:
+    """Memoizes ``plan_cost`` across a search (plans repeat a lot in GA/RL).
+
+    ``soft()`` returns the graded surrogate (finite for infeasible plans,
+    ordered by violation) used as search reward; ``__call__`` returns the
+    true cost (``inf`` when infeasible) used for final plan selection.
+    """
+
+    def __init__(self, profiles, fleet, job):
+        self.profiles, self.fleet, self.job = profiles, fleet, job
+        self._cache: dict[tuple[int, ...], float] = {}
+        self._soft: dict[tuple[int, ...], float] = {}
+        self.evaluations = 0
+
+    def __call__(self, assignment: Sequence[int]) -> float:
+        key = tuple(int(a) for a in assignment)
+        if key not in self._cache:
+            self.evaluations += 1
+            cost, _ = plan_cost(
+                SchedulingPlan(key), self.profiles, self.fleet, self.job
+            )
+            self._cache[key] = cost
+        return self._cache[key]
+
+    def soft(self, assignment: Sequence[int]) -> float:
+        from repro.core.cost_model import soft_plan_cost
+
+        key = tuple(int(a) for a in assignment)
+        if key not in self._soft:
+            cost = self(key)
+            self._soft[key] = (
+                cost if math.isfinite(cost) else soft_plan_cost(
+                    SchedulingPlan(key), self.profiles, self.fleet, self.job
+                )
+            )
+        return self._soft[key]
+
+    def best(self) -> tuple[tuple[int, ...], float]:
+        feas = {k: v for k, v in self._cache.items() if math.isfinite(v)}
+        if not feas:
+            k = min(self._cache, key=self._cache.get)
+            return k, self._cache[k]
+        k = min(feas, key=feas.get)
+        return k, feas[k]
+
+
+def penalized(cost: float, penalty: float) -> float:
+    """Finite stand-in for infeasible plans (RL/GA need finite rewards)."""
+    return penalty if cost == INFEASIBLE or not math.isfinite(cost) else cost

@@ -1,0 +1,167 @@
+"""Policy networks for RL scheduling (HeterPS §5.2, Fig. 3) — pure JAX.
+
+The LSTM reads one layer per step.  Step ``l``'s input is the layer's five
+features (Fig. 3: one-hot index, one-hot layer type, input size, weight
+size, communication time) concatenated with the one-hot of the previous
+action — this gives the autoregressive conditioning
+``P(a_l | a_{(l-1):1}; θ)`` of Formula 14.  The per-step output is a
+``T``-way softmax over resource types.
+
+An Elman RNN cell with the same interface implements the paper's RL-RNN
+baseline (which "suffers from the vanishing gradients problem", §6.2).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profiles import LAYER_KINDS, LayerProfile
+
+MAX_LAYERS = 64  # one-hot index capacity (paper models have <= 20 layers)
+
+
+def layer_features(profiles: Sequence[LayerProfile]) -> np.ndarray:
+    """(L, F) feature matrix — the five Fig.-3 features per layer."""
+    L = len(profiles)
+    kind_ix = {k: i for i, k in enumerate(LAYER_KINDS)}
+    feats = np.zeros((L, MAX_LAYERS + len(LAYER_KINDS) + 3), dtype=np.float32)
+    for i, p in enumerate(profiles):
+        feats[i, min(i, MAX_LAYERS - 1)] = 1.0                       # index
+        feats[i, MAX_LAYERS + kind_ix.get(p.kind, 0)] = 1.0          # type
+        base = MAX_LAYERS + len(LAYER_KINDS)
+        feats[i, base + 0] = math.log1p(p.input_bytes) / 20.0        # input size
+        feats[i, base + 1] = math.log1p(p.weight_bytes) / 20.0       # weight size
+        feats[i, base + 2] = math.log1p(1e6 * float(np.mean(p.odt))) / 20.0  # comm
+    return feats
+
+
+def init_lstm(key, in_dim: int, hidden: int, num_types: int):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(hidden)
+    return {
+        "wx": jax.random.uniform(k1, (in_dim, 4 * hidden), minval=-s, maxval=s),
+        "wh": jax.random.uniform(k2, (hidden, 4 * hidden), minval=-s, maxval=s),
+        "b": jnp.zeros((4 * hidden,)),
+        "wo": jax.random.uniform(k3, (hidden, num_types), minval=-s, maxval=s),
+        "bo": jnp.zeros((num_types,)),
+        "h0": jnp.zeros((hidden,)),
+        "c0": jnp.zeros((hidden,)),
+    }
+
+
+def init_rnn(key, in_dim: int, hidden: int, num_types: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(hidden)
+    return {
+        "wx": jax.random.uniform(k1, (in_dim, hidden), minval=-s, maxval=s),
+        "wh": jax.random.uniform(k2, (hidden, hidden), minval=-s, maxval=s),
+        "b": jnp.zeros((hidden,)),
+        "wo": jax.random.uniform(k3, (hidden, num_types), minval=-s, maxval=s),
+        "bo": jnp.zeros((num_types,)),
+        "h0": jnp.zeros((hidden,)),
+    }
+
+
+def _lstm_step(params, carry, x):
+    h, c = carry
+    z = x @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(z, 4)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+    c = f * c + i * jnp.tanh(g)
+    h = o * jnp.tanh(c)
+    return (h, c), h
+
+
+def _rnn_step(params, carry, x):
+    (h,) = carry
+    h = jnp.tanh(x @ params["wx"] + h @ params["wh"] + params["b"])
+    return (h,), h
+
+
+def _initial_carry(params, cell: str):
+    if cell == "lstm":
+        return (params["h0"], params["c0"])
+    return (params["h0"],)
+
+
+@partial(jax.jit, static_argnames=("cell", "num_types"))
+def sample_plan(params, feats, key, *, cell: str, num_types: int, temperature=1.0):
+    """Sample one plan autoregressively; returns (actions, sum log-prob)."""
+    step = _lstm_step if cell == "lstm" else _rnn_step
+
+    def body(carry, inp):
+        state, prev_a, k = carry
+        x = jnp.concatenate([inp, jax.nn.one_hot(prev_a, num_types)])
+        state, h = step(params, state, x)
+        logits = (h @ params["wo"] + params["bo"]) / temperature
+        k, ks = jax.random.split(k)
+        a = jax.random.categorical(ks, logits)
+        logp = jax.nn.log_softmax(logits)[a]
+        return (state, a, k), (a, logp)
+
+    carry = (_initial_carry(params, cell), jnp.int32(0), key)
+    _, (actions, logps) = jax.lax.scan(body, carry, feats)
+    return actions, logps.sum()
+
+
+@partial(jax.jit, static_argnames=("cell", "num_types"))
+def greedy_plan(params, feats, *, cell: str, num_types: int):
+    """Argmax decode — the final scheduling decision (§5.2)."""
+    step = _lstm_step if cell == "lstm" else _rnn_step
+
+    def body(carry, inp):
+        state, prev_a = carry
+        x = jnp.concatenate([inp, jax.nn.one_hot(prev_a, num_types)])
+        state, h = step(params, state, x)
+        a = jnp.argmax(h @ params["wo"] + params["bo"]).astype(jnp.int32)
+        return (state, a), a
+
+    carry = (_initial_carry(params, cell), jnp.int32(0))
+    _, actions = jax.lax.scan(body, carry, feats)
+    return actions
+
+
+def plan_logp(params, feats, actions, *, cell: str, num_types: int):
+    """Teacher-forced Σ_l log P(a_l | a_{(l-1):1}; θ) (Formula 14)."""
+    step = _lstm_step if cell == "lstm" else _rnn_step
+
+    def body(carry, inp):
+        state, prev_a = carry
+        x, a = inp
+        xin = jnp.concatenate([x, jax.nn.one_hot(prev_a, num_types)])
+        state, h = step(params, state, xin)
+        logits = h @ params["wo"] + params["bo"]
+        return (state, a), jax.nn.log_softmax(logits)[a]
+
+    carry = (_initial_carry(params, cell), jnp.int32(0))
+    _, logps = jax.lax.scan(body, carry, (feats, actions))
+    return logps.sum()
+
+
+@partial(jax.jit, static_argnames=("cell", "num_types"))
+def sample_batch(params, feats, keys, *, cell: str, num_types: int, temperature=1.0):
+    return jax.vmap(
+        lambda k: sample_plan(
+            params, feats, k, cell=cell, num_types=num_types, temperature=temperature
+        )
+    )(keys)
+
+
+@partial(jax.jit, static_argnames=("cell", "num_types"))
+def reinforce_grad(params, feats, actions_batch, advantages, *, cell, num_types):
+    """∇θ of the REINFORCE surrogate (Formula 15): mean over the batch of
+    ``advantage · log P(plan)`` — gradient *ascent* direction on reward."""
+
+    def surrogate(p):
+        logps = jax.vmap(
+            lambda a: plan_logp(p, feats, a, cell=cell, num_types=num_types)
+        )(actions_batch)
+        return jnp.mean(advantages * logps)
+
+    return jax.grad(surrogate)(params)

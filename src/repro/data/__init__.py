@@ -1,0 +1,9 @@
+"""Data pipeline + parameter-tiering (HeterPS data-management module)."""
+
+from repro.data.cache import AccessMonitor, Tier, TierThresholds
+from repro.data.pipeline import PrefetchLoader, SyntheticTokenDataset, shard_batch
+
+__all__ = [
+    "AccessMonitor", "Tier", "TierThresholds", "PrefetchLoader",
+    "SyntheticTokenDataset", "shard_batch",
+]

@@ -1,0 +1,101 @@
+"""Data pipeline — HeterPS data-management module (§3), training-data side.
+
+The paper stores training data in an HDFS cluster, prefetches batches
+into CPU-worker memory, and spills to SSD when RAM is tight.  Here:
+
+* :class:`SyntheticTokenDataset` — deterministic synthetic LM batches
+  (seeded per-step PRNG; reproducible across restarts and host counts);
+* :class:`PrefetchLoader` — background-thread prefetch with a bounded
+  queue (the paper's prefetch-and-cache behaviour);
+* :func:`shard_batch` — places a host batch onto the mesh with the batch
+  axis sharded over ``("pod", "data")``.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticTokenDataset:
+    """Deterministic synthetic next-token-prediction batches.
+
+    Step ``i`` is a pure function of (seed, i) — restart-safe, and every
+    host can generate its own shard without coordination.
+    """
+
+    def __init__(self, vocab: int, batch_size: int, seq_len: int, *,
+                 seed: int = 0, context_len: int = 0, d_model: int = 0):
+        self.vocab = vocab
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.seed = seed
+        self.context_len = context_len
+        self.d_model = d_model
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        toks = rng.integers(0, self.vocab,
+                            (self.batch_size, self.seq_len + 1), dtype=np.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.context_len:
+            out["context"] = rng.standard_normal(
+                (self.batch_size, self.context_len, self.d_model)
+            ).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        i = 0
+        while True:
+            yield self.batch(i)
+            i += 1
+
+
+class PrefetchLoader:
+    """Background prefetch with a bounded queue (HeterPS prefetches input
+    data into worker memory ahead of the consuming stage)."""
+
+    def __init__(self, dataset, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            for b in dataset:
+                if self._stop.is_set():
+                    return
+                self._q.put(b)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def shard_batch(batch: dict, mesh, batch_axes=("pod", "data")) -> dict:
+    """Device-put a host batch with the batch dim sharded over the data
+    axes of the mesh (replicated on the model axis)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def put(x):
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return {k: put(jnp.asarray(v)) for k, v in batch.items()}

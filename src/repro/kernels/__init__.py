@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated interpret=True on CPU) + jnp oracles."""
+
+from repro.kernels.ops import embedding_bag, flash_attention
+
+__all__ = ["embedding_bag", "flash_attention"]

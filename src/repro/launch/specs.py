@@ -1,0 +1,127 @@
+"""Input shapes (assigned) + ShapeDtypeStruct stand-ins for the dry-run.
+
+``input_specs()`` returns weak-type-correct, shardable ShapeDtypeStructs
+for every model input — no device allocation ever happens for the full
+configs; they are only lowered/compiled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch import steps as steps_mod
+from repro.models import decoder as dec
+from repro.models.config import ArchConfig
+from repro.optim import adamw_init
+from repro.parallel import sharding as shd
+
+#: Gemma-2 global-attention KV cap used for the 500k decode (DESIGN.md §4)
+GLOBAL_ATTN_CAP_500K = 32768
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports(cfg: ArchConfig, shape_name: str) -> bool:
+    """long_500k needs sub-quadratic attention (SSM/hybrid/sliding-window);
+    skips recorded in DESIGN.md / EXPERIMENTS.md."""
+    if shape_name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _context_sds(cfg: ArchConfig, batch: int):
+    if cfg.encoder is not None:
+        return _sds((batch, cfg.encoder.frames, cfg.d_model), jnp.float32)
+    if cfg.cross_kv_len:
+        return _sds((batch, cfg.cross_kv_len, cfg.d_model), jnp.float32)
+    return None
+
+
+def _template(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def param_templates(cfg: ArchConfig):
+    params_t = _template(
+        functools.partial(dec.init_model, cfg), jax.random.PRNGKey(0)
+    )
+    opt_t = _template(adamw_init, params_t)
+    return params_t, opt_t
+
+
+def input_specs(arch: str | ArchConfig, shape_name: str, mesh):
+    """→ (step_fn, args (ShapeDtypeStructs), in_shardings PartitionSpecs).
+
+    ``step_fn`` is the function the production launcher jits for this
+    (arch × shape): ``train_step`` / ``prefill_step`` / ``serve_step``.
+    """
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    shape = SHAPES[shape_name]
+    if not supports(cfg, shape_name):
+        raise ValueError(f"{cfg.name} does not support {shape_name} "
+                         "(full-attention at 524k — see DESIGN.md)")
+    B, S = shape.global_batch, shape.seq_len
+    params_t, opt_t = param_templates(cfg)
+    p_spec = shd.param_specs(params_t, cfg, mesh)
+
+    if shape.kind == "train":
+        batch_t = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        ctx = _context_sds(cfg, B)
+        if ctx is not None:
+            batch_t["context"] = ctx
+        b_spec = shd.batch_specs(batch_t, mesh, batch_size=B)
+        step = steps_mod.make_train_step(cfg, microbatch=cfg.train_microbatch)
+        # params/opt donate: the updated state aliases the old buffers
+        return (step, (params_t, opt_t, batch_t),
+                (p_spec, shd.param_specs(opt_t, cfg, mesh), b_spec), (0, 1))
+
+    if shape.kind == "prefill":
+        batch_t = {"tokens": _sds((B, S), jnp.int32)}
+        ctx = _context_sds(cfg, B)
+        if ctx is not None:
+            batch_t["context"] = ctx
+        b_spec = shd.batch_specs(batch_t, mesh, batch_size=B)
+        step = steps_mod.make_prefill_step(cfg)
+        return step, (params_t, batch_t), (p_spec, b_spec), ()
+
+    # decode: one new token against a seq_len cache
+    cap = GLOBAL_ATTN_CAP_500K if shape_name == "long_500k" else None
+    cache_t = _template(
+        functools.partial(dec.init_cache, cfg, B, S, global_cap=cap)
+    )
+    token_t = _sds((B, 1), jnp.int32)
+    index_t = _sds((), jnp.int32)
+    c_spec = shd.cache_specs(cache_t, cfg, mesh, batch_size=B)
+    t_spec = shd.batch_specs({"t": token_t}, mesh, batch_size=B)["t"]
+    from jax.sharding import PartitionSpec as P
+
+    step = steps_mod.make_serve_step(cfg)
+    # cache donates: decode updates it in place
+    return (step, (params_t, token_t, cache_t, index_t),
+            (p_spec, t_spec, c_spec, P()), (2,))

@@ -1,0 +1,89 @@
+"""Training launcher.
+
+On real hardware this runs the full configs against the production mesh;
+on the CPU container it trains *reduced* variants end-to-end (synthetic
+data, prefetch, checkpointing, metrics) — the full configs are exercised
+via ``dryrun.py``.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \\
+      --reduced --steps 100 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_IDS, get_config
+from repro.data import PrefetchLoader, SyntheticTokenDataset
+from repro.launch.steps import init_train_state, make_train_step
+
+
+def train(arch: str, *, reduced: bool = True, steps: int = 50,
+          batch: int = 8, seq: int = 128, lr: float = 3e-4,
+          microbatch: int | None = None, seed: int = 0,
+          checkpoint_dir: str | None = None, log_every: int = 10,
+          compute_dtype=jnp.float32) -> dict:
+    cfg = get_config(arch, reduced=reduced)
+    key = jax.random.PRNGKey(seed)
+    params, opt_state = init_train_state(cfg, key)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+    ctx_len = cfg.encoder.frames if cfg.encoder else cfg.cross_kv_len
+    ds = SyntheticTokenDataset(cfg.vocab, batch, seq, seed=seed,
+                               context_len=ctx_len, d_model=cfg.d_model)
+    loader = PrefetchLoader(ds, depth=2)
+    step_fn = jax.jit(make_train_step(cfg, lr=lr, microbatch=microbatch,
+                                      compute_dtype=compute_dtype))
+
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        batch_np = next(loader)
+        jbatch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, jbatch)
+        losses.append(float(metrics["loss"]))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"step {i:4d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+    loader.close()
+    if checkpoint_dir:
+        save_checkpoint(checkpoint_dir, params=params, opt_state=opt_state,
+                        step=steps, metadata={"arch": cfg.name})
+        print(f"checkpoint -> {checkpoint_dir}")
+    return {
+        "arch": cfg.name, "params": n_params, "steps": steps,
+        "first_loss": losses[0], "last_loss": losses[-1],
+        "loss_decreased": losses[-1] < losses[0],
+        "seconds": time.time() - t0,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+    summary = train(args.arch, reduced=args.reduced, steps=args.steps,
+                    batch=args.batch, seq=args.seq, lr=args.lr,
+                    microbatch=args.microbatch,
+                    checkpoint_dir=args.checkpoint_dir)
+    print(json.dumps(summary, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Block-pattern model definitions for the assigned architectures."""
+
+from repro.models.config import ArchConfig, EncoderConfig, LayerSpec
+from repro.models.decoder import (
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+)
+
+__all__ = [
+    "ArchConfig", "EncoderConfig", "LayerSpec", "decode_step", "forward",
+    "init_cache", "init_model", "loss_fn",
+]

@@ -1,0 +1,471 @@
+"""Unified block-pattern model covering all 10 assigned architectures.
+
+One implementation handles dense / MoE / SSM / hybrid / enc-dec / VLM via
+the :class:`~repro.models.config.ArchConfig` pattern.  Repeated pattern
+groups are stacked on a leading ``repeats`` axis and executed with
+``jax.lax.scan`` (+ ``jax.checkpoint`` remat), keeping HLO size O(pattern)
+and activation memory O(depth × layer-input).
+
+Entry points:
+  * :func:`init_model`  — parameter pytree
+  * :func:`forward`     — full-sequence logits (train / prefill / encoder)
+  * :func:`loss_fn`     — token cross-entropy (+ MoE aux loss)
+  * :func:`init_cache`  — decode cache (KV / SSM state / RWKV state)
+  * :func:`decode_step` — one-token serve step against the cache
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, LayerSpec
+from repro.parallel import act
+from repro.nn import attention as attn_mod
+from repro.nn import mamba as mamba_mod
+from repro.nn import moe as moe_mod
+from repro.nn import rwkv as rwkv_mod
+from repro.nn.attention import AttnSpec
+from repro.nn.base import (
+    cross_entropy_loss,
+    layernorm,
+    layernorm_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+)
+
+MOE_AUX_COEF = 0.01
+
+
+def _attn_spec(cfg: ArchConfig, spec: LayerSpec, *, causal=True) -> AttnSpec:
+    return AttnSpec(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        causal=causal, window=spec.window, logit_softcap=spec.logit_softcap,
+        rope=spec.rope and cfg.pos_embed == "rope",
+        rope_theta=cfg.rope_theta, rope_fraction=spec.rope_fraction,
+        qk_norm=spec.qk_norm,
+    )
+
+
+def _norm_init(cfg: ArchConfig, d: int):
+    return rmsnorm_init(d) if cfg.norm == "rms" else layernorm_init(d)
+
+
+def _norm(cfg: ArchConfig, p, x):
+    return rmsnorm(x, p) if cfg.norm == "rms" else layernorm(x, p)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ArchConfig, spec: LayerSpec):
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": _norm_init(cfg, d)}
+    aspec = _attn_spec(cfg, spec)
+    if spec.mixer in ("attn", "cross_attn"):
+        p["mixer"] = attn_mod.init_attention(keys[0], d, aspec)
+    elif spec.mixer == "attn+cross":
+        p["mixer"] = attn_mod.init_attention(keys[0], d, aspec)
+        p["norm_cross"] = _norm_init(cfg, d)
+        p["cross"] = attn_mod.init_attention(keys[1], d, aspec)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_mod.init_mamba(
+            keys[0], d, d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv,
+            expand=cfg.mamba_expand,
+        )
+    elif spec.mixer == "rwkv":
+        p["mixer"] = rwkv_mod.init_time_mix(keys[0], d, head_size=cfg.rwkv_head_size)
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.ffn != "none":
+        p["norm2"] = _norm_init(cfg, d)
+    if spec.ffn == "dense":
+        p["ffn"] = moe_mod.init_dense_ffn(keys[2], d, cfg.d_ff)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(keys[2], d, cfg.moe_d_ff or cfg.d_ff,
+                                    cfg.moe_experts)
+    elif spec.ffn == "channel_mix":
+        p["ffn"] = rwkv_mod.init_channel_mix(keys[2], d, cfg.d_ff)
+    if spec.post_norm:
+        p["norm_post1"] = _norm_init(cfg, d)
+        if spec.ffn != "none":
+            p["norm_post2"] = _norm_init(cfg, d)
+    return p
+
+
+def init_model(cfg: ArchConfig, key, *, dtype=jnp.float32):
+    cfg.validate()
+    keys = jax.random.split(key, 8)
+    d, vp = cfg.d_model, cfg.padded_vocab
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (vp, d)) * (1.0 / math.sqrt(d)),
+        "final_norm": _norm_init(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[1], (d, vp)) * (1.0 / math.sqrt(d))
+    if cfg.pos_embed == "learned":
+        params["pos"] = jax.random.normal(keys[2], (cfg.max_position, d)) * 0.02
+
+    # stacked pattern blocks: tuple over pattern index, leaves (repeats, …)
+    blocks = []
+    for j, spec in enumerate(cfg.pattern):
+        ks = jax.random.split(jax.random.fold_in(keys[3], j), cfg.repeats)
+        blocks.append(jax.vmap(lambda k: _init_layer(k, cfg, spec))(ks))
+    params["blocks"] = tuple(blocks)
+
+    if cfg.encoder is not None:
+        enc_spec = LayerSpec(mixer="attn", ffn="dense", rope=False)
+        ks = jax.random.split(keys[4], cfg.encoder.num_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _init_layer(k, cfg, enc_spec))(ks),
+            "final_norm": _norm_init(cfg, d),
+            "pos": jax.random.normal(keys[5], (cfg.encoder.frames, d)) * 0.02,
+        }
+    params = jax.tree.map(lambda x: x.astype(dtype), params)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _cast(p, dtype):
+    """Cast float params to the compute dtype (norms etc. recompute in f32
+    internally); non-float leaves pass through."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        p,
+    )
+
+
+def _apply_layer(cfg, spec: LayerSpec, p, x, *, positions, cross_kv=None,
+                 causal=True):
+    """One layer forward. Returns (x, moe_aux)."""
+    p = act.gather_params(_cast(p, x.dtype), cfg)
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, p["norm1"], x)
+    aspec = _attn_spec(cfg, spec, causal=causal)
+    if spec.mixer == "attn":
+        y = attn_mod.attention(p["mixer"], h, aspec, positions=positions)
+    elif spec.mixer == "cross_attn":
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(cross_kv.shape[1], dtype=jnp.int32), cross_kv.shape[:2]
+        )
+        y = attn_mod.attention(
+            p["mixer"], h, aspec, positions=positions,
+            kv_x=cross_kv.astype(h.dtype), kv_positions=kv_pos,
+        )
+    elif spec.mixer == "attn+cross":
+        y = attn_mod.attention(p["mixer"], h, aspec, positions=positions)
+        if spec.post_norm:
+            y = _norm(cfg, p["norm_post1"], y)
+        x = x + y
+        h = _norm(cfg, p["norm_cross"], x)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(cross_kv.shape[1], dtype=jnp.int32), cross_kv.shape[:2]
+        )
+        y = attn_mod.attention(
+            p["cross"], h, aspec, positions=positions,
+            kv_x=cross_kv.astype(h.dtype), kv_positions=kv_pos,
+        )
+    elif spec.mixer == "mamba":
+        y = mamba_mod.mamba(p["mixer"], h, d_state=cfg.mamba_d_state,
+                            d_conv=cfg.mamba_d_conv)
+    elif spec.mixer == "rwkv":
+        y = rwkv_mod.time_mix(p["mixer"], h, head_size=cfg.rwkv_head_size)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.post_norm and spec.mixer != "attn+cross":
+        y = _norm(cfg, p["norm_post1"], y)
+    x = x + y
+
+    if spec.ffn == "none":
+        return x, aux
+    h = _norm(cfg, p["norm2"], x)
+    if spec.ffn == "dense":
+        y = moe_mod.dense_ffn(p["ffn"], h)
+    elif spec.ffn == "moe":
+        y, moe_aux = moe_mod.moe_ffn(p["ffn"], h, top_k=cfg.moe_top_k,
+                                     capacity_factor=cfg.moe_capacity_factor)
+        aux = aux + moe_aux["aux_loss"]
+    elif spec.ffn == "channel_mix":
+        y = rwkv_mod.channel_mix_seq(p["ffn"], h)
+    else:
+        raise ValueError(spec.ffn)
+    if spec.post_norm:
+        y = _norm(cfg, p["norm_post2"], y)
+    return x + y, aux
+
+
+def _run_blocks(params, cfg: ArchConfig, x, *, positions, cross_kv=None,
+                remat=True):
+    """Scan the stacked pattern blocks over ``repeats``."""
+
+    def group(carry, block_slice):
+        x, aux = carry
+        for j, spec in enumerate(cfg.pattern):
+            def layer(p, x, positions, cross_kv, *, _spec=spec):
+                return _apply_layer(cfg, _spec, p, x, positions=positions,
+                                    cross_kv=cross_kv)
+
+            # per-LAYER remat: backward recomputes one layer at a time, so
+            # wide mixer internals (Mamba scan states, MoE buffers) never
+            # coexist across the whole pattern group.
+            if remat:
+                layer = jax.checkpoint(layer)
+            x, a = layer(block_slice[j], x, positions, cross_kv)
+            x = act.shard_batch_act(x)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(group, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return x, aux
+
+
+def _encode(params, cfg: ArchConfig, context, *, remat=True):
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    enc = params["encoder"]
+    x = context + enc["pos"][None, : context.shape[1]].astype(context.dtype)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2]
+    )
+    spec = LayerSpec(mixer="attn", ffn="dense", rope=False)
+
+    def layer(carry, p):
+        y, _ = _apply_layer(cfg, spec, p, carry, positions=positions,
+                            causal=False)
+        return act.shard_batch_act(y), None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return _norm(cfg, enc["final_norm"], x)
+
+
+def _hidden(params, cfg: ArchConfig, tokens, *, context=None,
+            compute_dtype=jnp.bfloat16, remat=True):
+    """Backbone forward up to the final norm. Returns (x (B,S,D), moe_aux)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    x = act.shard_batch_act(x)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_embed == "learned":
+        x = x + params["pos"][:S][None].astype(compute_dtype)
+
+    cross_kv = None
+    if cfg.encoder is not None:
+        cross_kv = _encode(params, cfg, context.astype(compute_dtype), remat=remat)
+    elif cfg.cross_kv_len:
+        cross_kv = context.astype(compute_dtype)
+
+    x, aux = _run_blocks(params, cfg, x, positions=positions,
+                         cross_kv=cross_kv, remat=remat)
+    return _norm(cfg, params["final_norm"], x), aux
+
+
+def forward(params, cfg: ArchConfig, tokens, *, context=None,
+            compute_dtype=jnp.bfloat16, remat=True):
+    """tokens: (B, S) int32; context: stub frontend embeddings (B, N, D)
+    for audio/vlm archs.  Returns (logits (B, S, padded_vocab), moe_aux)."""
+    x, aux = _hidden(params, cfg, tokens, context=context,
+                     compute_dtype=compute_dtype, remat=remat)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(compute_dtype)
+    logits = act.shard_logits(logits)
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux
+
+
+#: sequence-chunk length for the loss head: logits materialize one
+#: (B, LOSS_CHUNK, vocab) tile at a time (§Perf cycle 3 — the full
+#: (B, S, 256k) f32 logits dominated gemma2's HBM bytes)
+LOSS_CHUNK = 512
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, compute_dtype=jnp.bfloat16,
+            remat=True):
+    x, aux = _hidden(
+        params, cfg, batch["tokens"], context=batch.get("context"),
+        compute_dtype=compute_dtype, remat=remat,
+    )
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute_dtype)
+    labels = batch["labels"]
+    B, S, _ = x.shape
+    C = LOSS_CHUNK if (S % LOSS_CHUNK == 0 and S > LOSS_CHUNK) else S
+    nc = S // C
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        nll_sum, n = carry
+        x_c, y_c = inp                                   # (B,C,D), (B,C)
+        logits = x_c @ head
+        logits = act.shard_logits(logits)
+        if cfg.final_softcap:
+            logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        logits = logits.astype(jnp.float32)
+        mask = y_c >= 0
+        safe = jnp.maximum(y_c, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + (((logz - gold) * mask).sum())
+        return (nll_sum, n + mask.sum()), None
+
+    xs = (
+        jnp.moveaxis(x.reshape(B, nc, C, -1), 1, 0),
+        jnp.moveaxis(labels.reshape(B, nc, C), 1, 0),
+    )
+    (nll, n), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), xs
+    )
+    loss = nll / jnp.maximum(n, 1)
+    if cfg.has_moe:
+        loss = loss + MOE_AUX_COEF * aux / cfg.num_layers
+    return loss
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, cache_len: int,
+                 dtype):
+    kv = dict(
+        n_kv=cfg.n_kv_heads, hd=cfg.head_dim
+    )
+    c: dict[str, Any] = {}
+    if spec.mixer in ("attn", "attn+cross"):
+        L = cache_len if spec.window is None else min(cache_len, spec.window)
+        c["k"] = jnp.zeros((batch, L, kv["n_kv"], kv["hd"]), dtype)
+        c["v"] = jnp.zeros((batch, L, kv["n_kv"], kv["hd"]), dtype)
+        c["pos"] = jnp.full((batch, L), -1, jnp.int32)
+    if spec.mixer in ("cross_attn", "attn+cross"):
+        c["ck"] = jnp.zeros((batch, cfg.cross_kv_len, kv["n_kv"], kv["hd"]), dtype)
+        c["cv"] = jnp.zeros((batch, cfg.cross_kv_len, kv["n_kv"], kv["hd"]), dtype)
+    if spec.mixer == "mamba":
+        c.update(mamba_mod.init_mamba_cache(
+            batch, cfg.d_model, d_state=cfg.mamba_d_state,
+            d_conv=cfg.mamba_d_conv, expand=cfg.mamba_expand, dtype=dtype,
+        ))
+    if spec.mixer == "rwkv":
+        c.update(rwkv_mod.init_rwkv_cache(batch, cfg.d_model,
+                                          head_size=cfg.rwkv_head_size))
+    return c
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16, *, global_cap: int | None = None):
+    """Decode cache pytree, stacked (repeats, …) per pattern position.
+
+    ``global_cap`` bounds full-attention layers' KV length (used for
+    gemma2's global layers at ``long_500k`` — see DESIGN.md)."""
+    caches = []
+    for spec in cfg.pattern:
+        L = cache_len
+        if global_cap is not None and spec.mixer == "attn" and spec.window is None:
+            L = min(L, global_cap)
+        one = _layer_cache(cfg, spec, batch, L, dtype)
+        caches.append(
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.repeats,) + x.shape),
+                one,
+            )
+        )
+    return tuple(caches)
+
+
+def _decode_layer(cfg, spec: LayerSpec, p, x, cache, index):
+    p = act.gather_params(_cast(p, x.dtype), cfg)
+    aspec = _attn_spec(cfg, spec)
+    h = _norm(cfg, p["norm1"], x)
+    if spec.mixer == "attn":
+        y, cache = attn_mod.decode_attention(p["mixer"], h, cache, index, aspec)
+    elif spec.mixer == "cross_attn":
+        y, _ = attn_mod.decode_attention(
+            p["mixer"], h, {"k": cache["ck"], "v": cache["cv"]}, index, aspec,
+            cross=True,
+        )
+    elif spec.mixer == "attn+cross":
+        y, self_c = attn_mod.decode_attention(
+            p["mixer"], h, {k: cache[k] for k in ("k", "v", "pos")}, index, aspec
+        )
+        x = x + y
+        h = _norm(cfg, p["norm_cross"], x)
+        y, _ = attn_mod.decode_attention(
+            p["cross"], h, {"k": cache["ck"], "v": cache["cv"]}, index, aspec,
+            cross=True,
+        )
+        cache = {**cache, **self_c}
+    elif spec.mixer == "mamba":
+        y, cache = mamba_mod.decode_mamba(p["mixer"], h, cache,
+                                          d_state=cfg.mamba_d_state,
+                                          d_conv=cfg.mamba_d_conv)
+    elif spec.mixer == "rwkv":
+        y, tm = rwkv_mod.decode_time_mix(p["mixer"], h, cache,
+                                         head_size=cfg.rwkv_head_size)
+        cache = {**cache, **tm}
+    if spec.post_norm and spec.mixer != "attn+cross":
+        y = _norm(cfg, p["norm_post1"], y)
+    x = x + y
+    if spec.ffn == "none":
+        return x, cache
+    h = _norm(cfg, p["norm2"], x)
+    if spec.ffn == "dense":
+        y = moe_mod.dense_ffn(p["ffn"], h)
+    elif spec.ffn == "moe":
+        y, _ = moe_mod.moe_ffn(p["ffn"], h, top_k=cfg.moe_top_k,
+                               capacity_factor=cfg.moe_capacity_factor)
+    elif spec.ffn == "channel_mix":
+        y, cm = rwkv_mod.decode_channel_mix(p["ffn"], h, cache)
+        cache = {**cache, **cm}
+    if spec.post_norm:
+        y = _norm(cfg, p["norm_post2"], y)
+    return x + y, cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, index, *,
+                compute_dtype=jnp.bfloat16):
+    """One serve step: token (B, 1) int32 at position ``index`` (scalar),
+    against ``cache``.  Returns (logits (B, 1, padded_vocab), new_cache)."""
+    B = token.shape[0]
+    x = params["embed"][token].astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos"][index][None, None].astype(compute_dtype)
+
+    # Decode unrolls the repeats (python loop): one-token HLO per layer is
+    # tiny, and unrolling lets every layer's cache keep its sharding —
+    # SPMD handles per-iteration dynamic-slice resharding of scanned cache
+    # stacks poorly (involuntary full rematerialization).
+    new_stacks = []
+    for r in range(cfg.repeats):
+        p_r = jax.tree.map(lambda a: a[r], params["blocks"])
+        c_r = jax.tree.map(lambda a: a[r], cache)
+        new_c = []
+        for j, spec in enumerate(cfg.pattern):
+            x, cj = _decode_layer(cfg, spec, p_r[j], x, c_r[j], index)
+            x = act.shard_batch_act(x)
+            new_c.append(cj)
+        new_stacks.append(tuple(new_c))
+    new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_stacks)
+    x = _norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(compute_dtype)
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, new_cache

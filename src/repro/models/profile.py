@@ -1,0 +1,66 @@
+"""Analytic layer profiles of the assigned architectures for the
+HeterPS scheduler (§Arch-applicability, DESIGN.md §5).
+
+Converts an :class:`ArchConfig` into the per-layer
+(kind, flops, input_bytes, weight_bytes, output_bytes) sequence the
+cost model profiles — embedding and LM head included — so the RL
+scheduler can plan any of the 10 archs over a heterogeneous fleet.
+FLOPs are per token at the given training context length.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.profiles import LayerProfile, profile_layers
+from repro.models.config import ArchConfig
+
+_F = 4  # fp32 bytes
+
+
+def _layer_rows(cfg: ArchConfig, *, seq: int) -> list[tuple]:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    rows: list[tuple] = []
+    # input embedding — the data-intensive sparse lookup
+    rows.append(("embedding", 2.0 * d, 64.0, cfg.padded_vocab * d * _F, d * _F))
+    for i in range(cfg.num_layers):
+        spec = cfg.pattern[i % len(cfg.pattern)]
+        flops = 0.0
+        w_bytes = 0.0
+        if spec.mixer in ("attn", "cross_attn", "attn+cross"):
+            proj = 2.0 * d * (H + 2 * KV) * hd + 2.0 * H * hd * d
+            ctx = min(seq, spec.window or seq)
+            score = 4.0 * ctx * H * hd
+            n_attn = 2 if spec.mixer == "attn+cross" else 1
+            flops += n_attn * (proj + score)
+            w_bytes += n_attn * (2 * d * (H + 2 * KV) * hd) * _F
+            kind = "cross_attention" if spec.mixer != "attn" else "attention"
+        elif spec.mixer == "mamba":
+            din = cfg.mamba_expand * d
+            flops += 2.0 * d * 2 * din + 2.0 * din * d + 9.0 * din * cfg.mamba_d_state
+            w_bytes += (d * 2 * din + din * d + din * 4) * _F
+            kind = "ssm"
+        else:  # rwkv
+            flops += 2.0 * 5 * d * d + 4.0 * d * cfg.rwkv_head_size
+            w_bytes += 5 * d * d * _F
+            kind = "ssm"
+        if spec.ffn == "dense":
+            flops += 6.0 * d * cfg.d_ff
+            w_bytes += 3 * d * cfg.d_ff * _F
+        elif spec.ffn == "moe":
+            fe = cfg.moe_d_ff or cfg.d_ff
+            flops += 6.0 * d * fe * cfg.moe_top_k + 2.0 * d * cfg.moe_experts
+            w_bytes += 3 * d * fe * cfg.moe_experts * _F
+        elif spec.ffn == "channel_mix":
+            flops += 2.0 * d * cfg.d_ff + 2.0 * cfg.d_ff * d + 2.0 * d * d
+            w_bytes += (2 * d * cfg.d_ff + d * d) * _F
+        rows.append((kind, flops, d * _F, w_bytes, d * _F))
+    # LM head — compute-dense matmul over the (padded) vocab
+    rows.append(("fc", 2.0 * d * cfg.padded_vocab, d * _F,
+                 d * cfg.padded_vocab * _F, 32.0))
+    return rows
+
+
+def profile_arch(arch, fleet, *, seq: int = 4096) -> list[LayerProfile]:
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    return profile_layers(_layer_rows(cfg, seq=seq), fleet)

@@ -1,0 +1,1 @@
+"""Pure-JAX NN layer library (no flax/optax)."""

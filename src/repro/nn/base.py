@@ -1,0 +1,89 @@
+"""Basic pure-JAX NN building blocks (no flax/optax dependency)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+
+
+def rmsnorm_init(d: int):
+    return jnp.ones((d,), dtype=jnp.float32)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def layernorm_init(d: int):
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(x, p, *, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["w"] + p["b"]
+    return y.astype(dt)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap·tanh(x/cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+# --- rotary position embeddings -------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0, fraction: float = 1.0):
+    """Inverse frequencies for the rotated part of the head dim."""
+    rot = int(head_dim * fraction) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)), rot
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0, fraction: float = 1.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq).
+
+    ``fraction < 1`` rotates only the first ``fraction`` of the head dim —
+    ChatGLM's 2-d/partial RoPE (half the dims carry positional phase).
+    """
+    head_dim = x.shape[-1]
+    inv, rot = rope_freqs(head_dim, theta, fraction)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU FFN: (silu(x·w1) ⊙ x·w3)·w2 — bf16-friendly."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def cross_entropy_loss(logits, labels, *, vocab: int):
+    """Mean token cross-entropy; ignores labels < 0 and pad-vocab tail."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,130 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer) — pure JAX.
+
+Training/prefill uses ``jax.lax.associative_scan`` over time (parallel
+prefix scan → log-depth HLO, TPU-friendly); decode carries the SSM state
+``h (B, d_inner, d_state)`` and the causal-conv window, with O(1) work per
+new token — this is why Jamba runs the ``long_500k`` shape at all.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mamba(key, d_model: int, *, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: int | None = None):
+    din = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    si = 1.0 / math.sqrt(din)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, 2 * din)) * s,
+        "conv_w": jax.random.normal(ks[1], (d_conv, din)) * (1.0 / math.sqrt(d_conv)),
+        "conv_b": jnp.zeros((din,)),
+        "x_proj": jax.random.normal(ks[2], (din, dt_rank + 2 * d_state)) * si,
+        "dt_proj": jax.random.normal(ks[3], (dt_rank, din)) * (1.0 / math.sqrt(dt_rank)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((din,), 0.01))),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32), (din, d_state))),
+        "D": jnp.ones((din,)),
+        "out_proj": jax.random.normal(ks[4], (din, d_model)) * si,
+    }
+
+
+def _ssm_inputs(p, xc, dt_rank: int, d_state: int):
+    """Shared by train & decode: per-step dt/B/C and discretization."""
+    proj = xc @ p["x_proj"]                                   # (..., R+2N)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])    # (..., din)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (din, N)
+    Abar = jnp.exp(dt[..., None].astype(jnp.float32) * A)     # (..., din, N)
+    # Bbar·x — Euler discretization dt*B*x
+    Bx = (dt * xc)[..., None] * Bc[..., None, :].astype(dt.dtype)
+    return Abar, Bx.astype(jnp.float32), Cc
+
+
+#: time-chunk length for the selective scan: bounds the live
+#: (B, chunk, d_inner, d_state) f32 discretization tensors to one chunk
+#: (§Perf cycle 2 — the full-sequence associative scan materialized the
+#: whole (B, S, din, N) several times over in jamba's backward)
+SCAN_CHUNK = 512
+
+
+def mamba(p, x, *, d_state: int = 16, d_conv: int = 4, chunk: int = SCAN_CHUNK):
+    """Full-sequence forward. x: (B, S, D) → (B, S, D).
+
+    Chunked selective scan: sequential ``lax.scan`` over time chunks
+    carrying the SSM state, parallel ``associative_scan`` within a chunk;
+    the discretization (Ābar, B̄·x) is computed *inside* the (rematted)
+    chunk body so no (B, S, din, N) tensor ever materializes.
+    """
+    B, S, D = x.shape
+    from repro.parallel.act import shard_last_dim
+
+    din = p["in_proj"].shape[1] // 2
+    dt_rank = p["dt_proj"].shape[0]
+    xz = x @ p["in_proj"]
+    xc, z = jnp.split(xz, 2, axis=-1)                         # (B,S,din)
+    xc, z = shard_last_dim(xc), shard_last_dim(z)
+    # depthwise causal conv1d along time
+    xpad = jnp.pad(xc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    xc = sum(
+        xpad[:, i : i + S, :] * p["conv_w"][i] for i in range(d_conv)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    def combine(a, b):
+        a1, bx1 = a
+        a2, bx2 = b
+        return a2 * a1, a2 * bx1 + bx2
+
+    C = min(chunk, S)
+    if S % C:
+        C = S  # single chunk for ragged short sequences
+    nc = S // C
+    xcs = jnp.moveaxis(xc.reshape(B, nc, C, din), 1, 0)       # (nc,B,C,din)
+
+    @jax.checkpoint
+    def chunk_body(h0, xc_c):
+        Abar, Bx, Cc = _ssm_inputs(p, xc_c, dt_rank, d_state)  # (B,C,din,N)
+        A_cum, h_rel = jax.lax.associative_scan(combine, (Abar, Bx), axis=1)
+        h = h_rel + A_cum * h0[:, None]                        # carry state in
+        y = jnp.einsum("bcdn,bcn->bcd", h, Cc.astype(h.dtype))
+        return h[:, -1], y.astype(xc_c.dtype)
+
+    h0 = jnp.zeros((B, din, d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, xcs)                  # (nc,B,C,din)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, din)
+    y = y + p["D"] * xc
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def init_mamba_cache(batch: int, d_model: int, *, d_state: int = 16,
+                     d_conv: int = 4, expand: int = 2, dtype=jnp.float32):
+    din = expand * d_model
+    return {
+        "h": jnp.zeros((batch, din, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, din), dtype),
+    }
+
+
+def decode_mamba(p, x, cache, *, d_state: int = 16, d_conv: int = 4):
+    """One-token decode. x: (B, 1, D). Returns (y (B,1,D), new_cache)."""
+    B = x.shape[0]
+    dt_rank = p["dt_proj"].shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xc, z = jnp.split(xz, 2, axis=-1)                         # (B, din)
+    window = jnp.concatenate([cache["conv"], xc[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    xconv = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xconv = jax.nn.silu(xconv)
+    Abar, Bx, Cc = _ssm_inputs(p, xconv, dt_rank, d_state)    # (B,din,N)
+    h = Abar * cache["h"] + Bx
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(h.dtype)).astype(x.dtype)
+    y = y + p["D"] * xconv
+    y = y * jax.nn.silu(z)
+    new_cache = {"h": h, "conv": window[:, 1:, :]}
+    return (y @ p["out_proj"])[:, None, :], new_cache

@@ -1,0 +1,173 @@
+"""RWKV-6 ("Finch") block — attention-free mixer with data-dependent decay.
+
+Time-mix: per-head matrix-valued state ``S (B, H, hd, hd)`` updated as
+``S_t = diag(w_t)·S_{t-1} + kᵀ_t v_t`` where the decay ``w_t`` is
+*data-dependent* (low-rank LoRA on the shifted input — the headline
+RWKV-6 change over RWKV-5's static decay).  Readout uses the bonus ``u``
+for the current token.  Training scans time with ``lax.scan`` (the state
+is the carry); decode is the same step applied once — O(1) per token,
+which is why rwkv6 runs ``long_500k``.
+
+Channel-mix: squared-ReLU gated FFN with token shift.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.base import rmsnorm
+
+
+def _lora_init(key, d: int, rank: int, out: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": jax.random.normal(k1, (d, rank)) * (1.0 / math.sqrt(d)),
+        "b": jnp.zeros((rank, out)),
+    }
+
+
+def _lora(p, x):
+    return jnp.tanh(x @ p["a"]) @ p["b"]
+
+
+def init_time_mix(key, d_model: int, *, head_size: int = 64,
+                  decay_rank: int = 64, mix_rank: int = 32):
+    H = d_model // head_size
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "mu": jnp.full((5, d_model), 0.5),        # static shift-mix for r,k,v,g,w
+        "mix_lora": _lora_init(ks[0], d_model, mix_rank, 5 * d_model),
+        "wr": jax.random.normal(ks[1], (d_model, d_model)) * s,
+        "wk": jax.random.normal(ks[2], (d_model, d_model)) * s,
+        "wv": jax.random.normal(ks[3], (d_model, d_model)) * s,
+        "wg": jax.random.normal(ks[4], (d_model, d_model)) * s,
+        "wo": jax.random.normal(ks[5], (d_model, d_model)) * s,
+        "decay_base": jnp.full((d_model,), -6.0),
+        "decay_lora": _lora_init(ks[6], d_model, decay_rank, d_model),
+        "u": jax.random.normal(ks[7], (H, head_size)) * 0.1,  # current-token bonus
+        "ln_x": jnp.ones((d_model,)),             # per-head group norm weight
+    }
+    return p
+
+
+def _five_streams(p, x, x_prev):
+    """r,k,v,g,w inputs after data-dependent token shift.
+
+    x, x_prev: (..., D).  Returns tuple of five (..., D) tensors.
+    """
+    d = x.shape[-1]
+    delta = x_prev - x
+    lora = _lora(p["mix_lora"], x + 0.5 * delta)       # (..., 5D)
+    lora = lora.reshape(lora.shape[:-1] + (5, d))
+    outs = []
+    for j in range(5):
+        mix = p["mu"][j] + lora[..., j, :]
+        outs.append(x + delta * mix)
+    return outs
+
+
+def time_mix(p, x, *, head_size: int = 64):
+    """Full-sequence time-mix. x: (B, S, D) → (B, S, D)."""
+    B, S, D = x.shape
+    H = D // head_size
+    from repro.parallel.act import shard_heads
+
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    xr, xk, xv, xg, xw = _five_streams(p, x, x_prev)
+    r = shard_heads((xr @ p["wr"]).reshape(B, S, H, head_size), axis=2)
+    k = shard_heads((xk @ p["wk"]).reshape(B, S, H, head_size), axis=2)
+    v = shard_heads((xv @ p["wv"]).reshape(B, S, H, head_size), axis=2)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay in (0,1): w = exp(-exp(base + lora(xw)))
+    w = jnp.exp(-jnp.exp(p["decay_base"] + _lora(p["decay_lora"], xw)))
+    w = w.reshape(B, S, H, head_size).astype(jnp.float32)
+
+    kv = jnp.einsum("bshi,bshj->bshij", k.astype(jnp.float32), v.astype(jnp.float32))
+
+    def step(S_state, inp):
+        w_t, kv_t, r_t = inp                           # (B,H,hd), (B,H,hd,hd), (B,H,hd)
+        out = jnp.einsum(
+            "bhi,bhij->bhj", r_t, S_state + p["u"][None, :, :, None] * kv_t
+        )
+        S_new = w_t[..., None] * S_state + kv_t
+        return S_new, out
+
+    S0 = jnp.zeros((B, H, head_size, head_size), jnp.float32)
+    _, out = jax.lax.scan(
+        step,
+        S0,
+        (
+            jnp.moveaxis(w, 1, 0),
+            jnp.moveaxis(kv, 1, 0),
+            jnp.moveaxis(r.astype(jnp.float32), 1, 0),
+        ),
+    )
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, D)     # (B,S,D)
+    out = rmsnorm(out, p["ln_x"])                      # group-norm stand-in
+    return (out.astype(x.dtype) * g) @ p["wo"]
+
+
+def init_channel_mix(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5),
+        "mu_r": jnp.full((d_model,), 0.5),
+        "wk": jax.random.normal(ks[0], (d_model, d_ff)) * s,
+        "wv": jax.random.normal(ks[1], (d_ff, d_model)) * (1.0 / math.sqrt(d_ff)),
+        "wr": jax.random.normal(ks[2], (d_model, d_model)) * s,
+    }
+
+
+def channel_mix(p, x, x_prev):
+    from repro.parallel.act import shard_last_dim
+
+    xk = x + (x_prev - x) * p["mu_k"]
+    xr = x + (x_prev - x) * p["mu_r"]
+    k = shard_last_dim(jnp.square(jax.nn.relu(xk @ p["wk"])))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+
+def channel_mix_seq(p, x):
+    B, S, D = x.shape
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    return channel_mix(p, x, x_prev)
+
+
+def init_rwkv_cache(batch: int, d_model: int, *, head_size: int = 64):
+    H = d_model // head_size
+    return {
+        "state": jnp.zeros((batch, H, head_size, head_size), jnp.float32),
+        "tm_shift": jnp.zeros((batch, d_model), jnp.float32),
+        "cm_shift": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def decode_time_mix(p, x, cache, *, head_size: int = 64):
+    """One-token time-mix. x: (B, 1, D)."""
+    B, _, D = x.shape
+    H = D // head_size
+    xt = x[:, 0]
+    xr, xk, xv, xg, xw = _five_streams(p, xt, cache["tm_shift"].astype(xt.dtype))
+    r = (xr @ p["wr"]).reshape(B, H, head_size).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, H, head_size).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, H, head_size).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(-jnp.exp(p["decay_base"] + _lora(p["decay_lora"], xw)))
+    w = w.reshape(B, H, head_size).astype(jnp.float32)
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)
+    out = jnp.einsum("bhi,bhij->bhj", r, cache["state"] + p["u"][None, :, :, None] * kv)
+    new_state = w[..., None] * cache["state"] + kv
+    out = rmsnorm(out.reshape(B, D), p["ln_x"]).astype(x.dtype)
+    y = (out * g) @ p["wo"]
+    return y[:, None, :], {"state": new_state, "tm_shift": xt.astype(jnp.float32)}
+
+
+def decode_channel_mix(p, x, cache):
+    xt = x[:, 0]
+    y = channel_mix(p, xt, cache["cm_shift"].astype(xt.dtype))
+    return y[:, None, :], {"cm_shift": xt.astype(jnp.float32)}

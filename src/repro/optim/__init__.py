@@ -1,0 +1,14 @@
+"""Optimizers, pure JAX (no optax)."""
+
+from repro.optim.optimizers import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    sgd_update,
+)
+
+__all__ = [
+    "OptState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "sgd_update",
+]

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, HeterPS stage pipeline, PS-style sparse path."""

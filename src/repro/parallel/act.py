@@ -1,0 +1,143 @@
+"""Activation sharding constraints, mesh-context aware.
+
+XLA's SPMD propagation can resolve the (batch over ``data``) × (params
+FSDP-sharded over ``data``) conflict in the wrong direction — replicating
+activations and all-gathering the batch instead of the weights.  These
+helpers re-anchor activations to batch sharding at block boundaries.
+They no-op when no mesh is active (single-device smoke tests) or when a
+dim doesn't divide.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def current_mesh():
+    import warnings
+
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            return am
+    except Exception:
+        pass
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _axes_for_batch(mesh, n: int):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    prod = 1
+    for a in axes:
+        prod *= mesh.shape[a]
+    if axes and prod and n % prod == 0:
+        return axes
+    return None
+
+
+def _model_axis(mesh, n: int):
+    if "model" in mesh.axis_names and n % mesh.shape["model"] == 0:
+        return "model"
+    return None
+
+
+def shard_batch_act(x):
+    """(B, …) activations: batch over ("pod","data")."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    axes = _axes_for_batch(mesh, x.shape[0])
+    if axes is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(axes, *([None] * (x.ndim - 1)))
+    )
+
+
+def shard_logits(x):
+    """(B, S, V) logits: batch over data axes, vocab over model."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    axes = _axes_for_batch(mesh, x.shape[0])
+    vax = _model_axis(mesh, x.shape[-1])
+    if axes is None and vax is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(axes, *([None] * (x.ndim - 2)), vax)
+    )
+
+
+def shard_heads(x, *, axis: int):
+    """Constrain the head dim of an attention intermediate to the model
+    axis (keeps tensor parallelism through the score einsums); batch dim 0
+    stays on the data axes."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = _axes_for_batch(mesh, x.shape[0])
+    spec[axis] = _model_axis(mesh, x.shape[axis])
+    if spec[0] is None and spec[axis] is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_last_dim(x):
+    """(B, …, F) hiddens: batch over data axes, feature over model —
+    forces Megatron column-parallel FFN/state layout (no all-reduce of
+    the wide hidden)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = _axes_for_batch(mesh, x.shape[0])
+    spec[-1] = _model_axis(mesh, x.shape[-1])
+    if spec[0] is None and spec[-1] is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def gather_params(p, cfg):
+    """Explicit FSDP: constrain each weight to its *compute* layout —
+    model-axis sharding only, data-axis replicated.  XLA then all-gathers
+    the FSDP-sharded weights (cotangent: reduce-scatter) instead of
+    un-sharding the activations' batch dim."""
+    mesh = current_mesh()
+    if mesh is None:
+        return p
+    model = mesh.shape.get("model", 1)
+    from repro.parallel.sharding import _spec_for
+
+    def f(path, leaf):
+        if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        spec = _spec_for(path, leaf, data=1, model=model, d_ff=cfg.d_ff)
+        return jax.lax.with_sharding_constraint(leaf, spec)
+
+    return jax.tree_util.tree_map_with_path(f, p)
+
+
+def shard_moe_group_buffer(x):
+    """(G, E, C, D) grouped expert buffers: groups over the data axes,
+    experts over the model axis."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    gax = _axes_for_batch(mesh, x.shape[0])
+    eax = _model_axis(mesh, x.shape[1])
+    if gax is None and eax is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(gax, eax, *([None] * (x.ndim - 2)))
+    )

@@ -1,0 +1,69 @@
+"""Parameter-server-style sparse embedding path (HeterPS §3).
+
+The paper keeps huge sparse embedding tables on CPU parameter servers:
+workers *pull* only the touched rows, compute, and *push* sparse row
+gradients back.  TPU mapping (DESIGN.md §2): the table is vocab-sharded
+across the mesh; lookups are XLA gathers against the sharded table
+(pull), and the update applies a COO scatter-add of (ids, row-grads)
+without ever materializing a dense gradient (push).  The dense-layer
+path, by contrast, allreduces full gradients — the paper's
+ring-allreduce side.
+
+``sparse_pull``/``sparse_push`` are jit-compatible and differentiable
+building blocks; :class:`SparseEmbedding` packages them with a
+row-frequency hook for the data-management tier monitor.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_pull(table, ids):
+    """Pull rows: (V, D)[ids (…,)] → (…, D).  JAX's gather VJP is already
+    the sparse push we want — a scatter-add of the touched rows' cotangent
+    into a zero table (XLA keeps it as a scatter; no dense gradient
+    materializes beyond the table-shaped accumulator)."""
+    return table[ids]
+
+
+def sparse_push(table, ids, row_grads, *, lr: float):
+    """PS push: apply row gradients to the table without a dense grad.
+    ids: (N,), row_grads: (N, D)."""
+    return table.at[ids].add((-lr * row_grads).astype(table.dtype))
+
+
+def segment_rowsum(ids, row_grads, *, num_rows: int):
+    """Aggregate duplicate ids before the push (the PS's reduce step)."""
+    return (
+        jnp.zeros((num_rows, row_grads.shape[-1]), row_grads.dtype)
+        .at[ids]
+        .add(row_grads)
+    )
+
+
+class SparseEmbedding:
+    """Vocab-sharded embedding with PS-style sparse update + access stats."""
+
+    def __init__(self, vocab: int, dim: int, key, *, monitor=None):
+        self.vocab = vocab
+        self.dim = dim
+        self.table = jax.random.normal(key, (vocab, dim)) * (dim**-0.5)
+        self.monitor = monitor  # repro.data.cache.AccessMonitor
+
+    def lookup(self, ids):
+        if self.monitor is not None:
+            import numpy as np
+
+            self.monitor.record(np.asarray(ids))
+        return sparse_pull(self.table, ids)
+
+    def apply_sparse_grads(self, ids, row_grads, *, lr: float):
+        ids_flat = ids.reshape(-1)
+        g_flat = row_grads.reshape(-1, self.dim)
+        self.table = sparse_push(self.table, ids_flat, g_flat, lr=lr)
+        return self.table

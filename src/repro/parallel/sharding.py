@@ -1,0 +1,180 @@
+"""Parameter / batch / cache sharding rules for the production mesh.
+
+Baseline layout (recorded as such in EXPERIMENTS.md §Roofline):
+
+* 2-D param sharding — tensor-parallel over ``model`` and FSDP-style over
+  ``data`` wherever both dims divide evenly (Megatron × ZeRO hybrid); the
+  ``pod`` axis is pure data parallelism (params replicated across pods).
+* batch shards over ``("pod", "data")``; a batch of 1 (``long_500k``)
+  replicates batch and shards the KV-cache *length* over ``data``.
+* optimizer moments mirror the param specs (ZeRO falls out for free).
+
+Rules are name/shape driven so one function covers every architecture's
+parameter tree; anything unmatched (scalars, tiny LoRA factors, router
+weights) is replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+#: 2-D weights whose *input* dim contracts on the model axis (output
+#: projections): shard (model, data).  Everything else 2-D that divides
+#: evenly shards (data, model).
+_OUT_PROJ_NAMES = {"wo", "w2", "out_proj"}
+
+
+def _axis_sizes(mesh) -> tuple[int, int]:
+    data = mesh.shape.get("data", 1)
+    model = mesh.shape.get("model", 1)
+    return data, model
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _spec_for(path: tuple, leaf, *, data: int, model: int, d_ff: int,
+              stacked: bool = False) -> P:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = names[-1] if names else ""
+    shape = leaf.shape
+
+    if stacked and "blocks" in names:
+        # stacked pattern-block leaves carry a leading ``repeats`` dim:
+        # compute the spec for the per-layer shape and prepend None.
+        inner = _spec_for(
+            path, jax.ShapeDtypeStruct(shape[1:], leaf.dtype),
+            data=data, model=model, d_ff=d_ff, stacked=False,
+        )
+        return P(None, *inner)
+
+    if len(shape) <= 1:
+        return P()  # scalars & vectors: replicate (tiny)
+
+    if name == "embed":
+        # vocab → model (PS-style sharded table), d_model → data (ZeRO)
+        return P("model" if _div(shape[0], model) else None,
+                 "data" if _div(shape[1], data) else None)
+    if name == "lm_head":
+        return P("data" if _div(shape[0], data) else None,
+                 "model" if _div(shape[1], model) else None)
+    if name == "pos":
+        return P(None, "model" if _div(shape[1], model) else None)
+
+    if len(shape) == 3:  # MoE expert weights (E, in, out)
+        e = "model" if _div(shape[0], model) else None
+        if name == "w2":  # (E, F, D): F contracts; shard D over data
+            return P(e, None, "data" if _div(shape[2], data) else None)
+        return P(e, "data" if _div(shape[1], data) else None, None)
+
+    if len(shape) == 2:
+        out_proj = name in _OUT_PROJ_NAMES or (
+            name == "wv" and shape[0] == d_ff  # rwkv channel-mix value proj
+        )
+        if out_proj:
+            return P("model" if _div(shape[0], model) else None,
+                     "data" if _div(shape[1], data) else None)
+        return P("data" if _div(shape[0], data) else None,
+                 "model" if _div(shape[1], model) else None)
+
+    return P()
+
+
+def param_specs(params, cfg, mesh) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on templates too)."""
+    data, model = _axis_sizes(mesh)
+
+    def f(path, leaf):
+        return _spec_for(path, leaf, data=data, model=model, d_ff=cfg.d_ff,
+                         stacked=True)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(batch_template, mesh, *, batch_size: int) -> Any:
+    """Shard the batch dim over ("pod","data") when divisible, else
+    replicate (the ``long_500k`` B=1 case)."""
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    lead = axes if _div(batch_size, total) else None
+
+    def f(leaf):
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(f, batch_template)
+
+
+def cache_specs(cache_template, cfg, mesh, *, batch_size: int) -> Any:
+    """Decode-cache sharding.  Leaves are stacked (repeats, B, …).
+
+    * batch divisible → shard B over ("pod","data") and the KV cache
+      *length* over model — flash-decode style: the q·K score contraction
+      is then fully local per shard (only per-shard softmax stats/logits
+      cross the mesh) instead of all-gathering K/V every layer (§Perf
+      cycle 1: 103 GB/dev → logits-sized collectives on internlm2
+      decode_32k);
+    * B=1 (long_500k) → additionally shard the length over data.
+    """
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    shard_batch = _div(batch_size, total)
+    data, model = _axis_sizes(mesh)
+
+    def f(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        s = [None] * leaf.ndim
+        if shard_batch:
+            s[1] = axes
+        if name in ("k", "v", "ck", "cv"):
+            # (repeats, B, L, KV, hd): L over model (+ data when B=1)
+            if shard_batch:
+                if _div(leaf.shape[2], model):
+                    s[2] = "model"
+            else:
+                l_axes = tuple(a for a, n in (("data", data), ("model", model))
+                               if _div(leaf.shape[2], n))
+                if _div(leaf.shape[2], data * model):
+                    s[2] = ("data", "model")
+                elif l_axes:
+                    s[2] = l_axes[0]
+        elif name == "pos":
+            if shard_batch:
+                if _div(leaf.shape[2], model):
+                    s[2] = "model"
+            elif _div(leaf.shape[2], data * model):
+                s[2] = ("data", "model")
+            elif _div(leaf.shape[2], data):
+                s[2] = "data"
+        elif name in ("h", "conv"):           # mamba (…, din, N) / (…, W, din)
+            din_axis = 2 if name == "h" else 3
+            if _div(leaf.shape[din_axis], model):
+                s[din_axis] = "model"
+        elif name == "state":                 # rwkv (repeats, B, H, hd, hd)
+            if _div(leaf.shape[2], model):
+                s[2] = "model"
+        elif name in ("tm_shift", "cm_shift"):
+            if _div(leaf.shape[-1], model):
+                s[-1] = "model"
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(f, cache_template)

@@ -1,0 +1,101 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e targets).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` of an SPMD-partitioned executable reports *per-device*
+FLOPs/bytes, so terms are already per-chip.  Collective bytes are parsed
+from the compiled HLO (operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute; async ``-start`` forms
+counted once).
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12       # bf16 per chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+# tuple-typed async starts: "= (f32[..], f32[..]) all-gather-start(...)"
+_COLL_TUPLE_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Per-device collective bytes by op kind (output/operand sizes)."""
+    by_kind: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            if m.group(4) and "-done(" in line:
+                continue
+            b = _shape_bytes(dtype, dims)
+        else:
+            m = _COLL_TUPLE_RE.search(line)
+            if not m:
+                continue
+            kind = m.group(2)
+            # async start tuple carries (operand, result[, scratch]): count
+            # the result element (largest) once.
+            b = max(
+                (_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1))),
+                default=0,
+            )
+        by_kind[kind] = by_kind.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {
+        "bytes_by_kind": by_kind,
+        "counts": counts,
+        "total_bytes": sum(by_kind.values()),
+    }
+
+
+def roofline_terms(*, flops: float, hbm_bytes: float,
+                   collective_bytes: float) -> dict:
+    compute = flops / PEAK_FLOPS
+    memory = hbm_bytes / HBM_BW
+    collective = collective_bytes / LINK_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    total = max(compute, memory, collective)
+    terms["bound_fraction"] = {
+        k.replace("_s", ""): (v / total if total else 0.0)
+        for k, v in list(terms.items())
+        if isinstance(v, float)
+    }
+    return terms
+
+
+def model_flops(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6·N·D (per step), N = active params, D = tokens."""
+    return 6.0 * n_params_active * tokens

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: REDUCED variants (≤2 pattern repeats,
+d_model≤512, ≤4 experts) run one real forward/train/decode step on CPU,
+asserting output shapes and no NaNs — the assignment's smoke requirement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models import decode_step, forward, init_cache, init_model, loss_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    b = {"tokens": toks, "labels": toks}
+    if cfg.cross_kv_len:
+        n = cfg.encoder.frames if cfg.encoder else cfg.cross_kv_len
+        b["context"] = jax.random.normal(KEY, (B, n, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_reduced_config_limits(self, arch):
+        cfg = get_config(arch, reduced=True)
+        assert cfg.num_layers <= 4
+        assert cfg.d_model <= 512
+        assert cfg.moe_experts <= 4
+
+    def test_full_config_matches_assignment(self, arch):
+        cfg = get_config(arch)
+        cfg.validate()
+        spec = {
+            "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+            "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+            "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+            "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+            "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+            "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+            "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+            "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+            "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+            "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        }[arch]
+        L, d, H, KV, ff, V = spec
+        assert cfg.num_layers == L and cfg.d_model == d
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+        assert cfg.d_ff == ff and cfg.vocab == V
+
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_config(arch, reduced=True)
+        params = init_model(cfg, KEY)
+        b = _batch(cfg)
+        logits, _ = forward(params, cfg, b["tokens"], context=b.get("context"),
+                            compute_dtype=jnp.float32)
+        assert logits.shape == (2, 32, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_train_step_decreases_loss(self, arch):
+        cfg = get_config(arch, reduced=True)
+        params, opt = init_train_state(cfg, KEY)
+        step = jax.jit(make_train_step(cfg, lr=1e-3, microbatch=None,
+                                       compute_dtype=jnp.float32))
+        b = _batch(cfg, B=4, S=16)
+        l0 = float(loss_fn(params, cfg, b, compute_dtype=jnp.float32))
+        for _ in range(3):
+            params, opt, m = step(params, opt, b)
+            assert np.isfinite(float(m["loss"]))
+        l1 = float(loss_fn(params, cfg, b, compute_dtype=jnp.float32))
+        assert l1 < l0  # same-batch overfit sanity
+
+    def test_decode_step_shapes_and_finite(self, arch):
+        cfg = get_config(arch, reduced=True)
+        params = init_model(cfg, KEY)
+        B = 2
+        cache = init_cache(cfg, B, 64, dtype=jnp.float32)
+        tok = jax.random.randint(KEY, (B, 1), 0, cfg.vocab)
+        logits, new_cache = decode_step(params, cfg, tok, cache, jnp.int32(3),
+                                        compute_dtype=jnp.float32)
+        assert logits.shape == (B, 1, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+class TestDecodeConsistency:
+    """Teacher-forced decode must match the parallel forward (same math)."""
+
+    @pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-2b", "rwkv6-7b",
+                                      "jamba-v0.1-52b", "olmoe-1b-7b"])
+    def test_decode_matches_forward(self, arch):
+        import dataclasses
+
+        cfg = get_config(arch, reduced=True)
+        if cfg.has_moe:
+            # disable capacity drops: batched routing drops tokens a
+            # per-token decode wouldn't (GShard semantics); equivalence
+            # holds at full capacity.
+            cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+        params = init_model(cfg, KEY)
+        B, S = 1, 12
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        full, _ = forward(params, cfg, toks, compute_dtype=jnp.float32,
+                          remat=False)
+        cache = init_cache(cfg, B, S, dtype=jnp.float32)
+        outs = []
+        for i in range(S):
+            lg, cache = decode_step(params, cfg, toks[:, i : i + 1], cache,
+                                    jnp.int32(i), compute_dtype=jnp.float32)
+            outs.append(lg[:, 0])
+        dec = jnp.stack(outs, axis=1)
+        # MoE top-k ties can flip experts between batched/single-token
+        # routing; tolerance covers that for the moe archs.
+        tol = 2e-2 if cfg.has_moe else 2e-3
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   atol=tol, rtol=tol)

@@ -1,0 +1,99 @@
+"""Pallas kernel validation: interpret-mode sweep vs the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.flash_attention import flash_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, H, Sq, Sk, hd, dtype):
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, Sq, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, H, Sk, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, H, Sk, hd), dtype)
+    return q, k, v
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,S,hd", [
+        (1, 1, 128, 64), (2, 2, 256, 64), (1, 2, 384, 128), (1, 1, 128, 256),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shape_dtype_sweep_causal(self, B, H, S, hd, dtype):
+        q, k, v = _qkv(B, H, S, S, hd, dtype)
+        out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), atol=tol)
+
+    @pytest.mark.parametrize("window", [32, 100, 128])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(1, 2, 256, 256, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+    def test_logit_softcap(self):
+        q, k, v = _qkv(1, 1, 128, 128, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=True, softcap=50.0, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, softcap=50.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+    def test_non_causal_encoder(self):
+        q, k, v = _qkv(2, 1, 128, 256, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=False, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+    def test_cross_lengths(self):
+        q, k, v = _qkv(1, 2, 128, 384, 64, jnp.float32)
+        out = flash_attention(q, k, v, causal=False, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+    def test_matches_model_blockwise_path(self):
+        """The XLA blockwise fallback and the Pallas kernel agree."""
+        from repro.nn.attention import AttnSpec, _sdpa_blockwise
+
+        B, H, S, hd = 1, 2, 4096, 64
+        q, k, v = _qkv(B, H, S, S, hd, jnp.float32)
+        spec = AttnSpec(n_heads=H, n_kv_heads=H, head_dim=hd, causal=True,
+                        rope=False)
+        qb = jnp.moveaxis(q, 1, 2)  # (B,S,H,hd)
+        kb = jnp.moveaxis(k, 1, 2)
+        vb = jnp.moveaxis(v, 1, 2)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        out_xla = jnp.moveaxis(_sdpa_blockwise(qb, kb, vb, pos, pos, spec), 2, 1)
+        out_pl = flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out_xla), np.asarray(out_pl),
+                                   atol=3e-5)
+
+
+class TestEmbeddingBag:
+    @pytest.mark.parametrize("N,bag,V,dim", [
+        (8, 4, 100, 128), (16, 1, 50, 128), (4, 16, 1000, 256),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, N, bag, V, dim, dtype):
+        ids = jax.random.randint(KEY, (N, bag), 0, V)
+        table = jax.random.normal(KEY, (V, dim), dtype)
+        out = embedding_bag(ids, table, interpret=True)
+        want = ref.embedding_bag_ref(ids, table)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), atol=tol)
+
+    def test_duplicate_ids(self):
+        ids = jnp.zeros((4, 8), jnp.int32)  # all the same row
+        table = jax.random.normal(KEY, (10, 128))
+        out = embedding_bag(ids, table, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(8 * table[0])[None]
+                                   .repeat(4, 0), rtol=1e-5)

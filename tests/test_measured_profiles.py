@@ -1,0 +1,57 @@
+"""Measured-profile ingestion (the paper's §4.1 profiling input path)."""
+
+import json
+import math
+
+from repro.core import SchedulingPlan, TrainingJob, default_fleet, plan_cost
+from repro.core.profiles import profiles_from_json
+
+FLEET = default_fleet()
+
+
+def test_direct_oct_measurements(tmp_path):
+    rows = [
+        {"kind": "embedding", "oct": [0.001, 0.0005],
+         "odt_sync": [0.0002, 0.0002], "odt_act": [0.0001, 0.0001]},
+        {"kind": "fc", "oct": [0.01, 0.0001],
+         "odt_sync": [0.0001, 0.0001], "odt_act": [0.0001, 0.0001]},
+    ]
+    p = tmp_path / "prof.json"
+    p.write_text(json.dumps(rows))
+    profs = profiles_from_json(str(p), FLEET)
+    assert len(profs) == 2
+    assert profs[0].oct == (0.001, 0.0005)
+    assert profs[1].odt == (0.0002, 0.0002)
+
+
+def test_size_measurements_go_analytic(tmp_path):
+    rows = [
+        {"kind": "embedding", "flops": 1e4, "input_bytes": 1e5,
+         "weight_bytes": 1e9, "output_bytes": 2e4},
+        {"kind": "fc", "flops": 1e8, "input_bytes": 4e3,
+         "weight_bytes": 1e7, "output_bytes": 4e3},
+    ]
+    p = tmp_path / "prof.json"
+    p.write_text(json.dumps(rows))
+    profs = profiles_from_json(str(p), FLEET)
+    assert [pr.index for pr in profs] == [0, 1]
+    # data-intensive layer relatively cheaper on CPU than the fc layer
+    emb_rel = profs[0].oct[0] / profs[0].oct[1]
+    fc_rel = profs[1].oct[0] / profs[1].oct[1]
+    assert emb_rel < fc_rel
+
+
+def test_measured_profiles_drive_cost_model(tmp_path):
+    rows = [
+        {"kind": "embedding", "oct": [1e-4, 5e-3],
+         "odt_sync": [1e-5, 1e-5], "odt_act": [1e-5, 1e-5]},
+        {"kind": "fc", "oct": [5e-2, 1e-5],
+         "odt_sync": [1e-5, 1e-5], "odt_act": [1e-5, 1e-5]},
+    ]
+    p = tmp_path / "prof.json"
+    p.write_text(json.dumps(rows))
+    profs = profiles_from_json(str(p), FLEET)
+    job = TrainingJob(throughput_limit=50_000.0)
+    het, _ = plan_cost(SchedulingPlan((0, 1)), profs, FLEET, job)
+    gpu, _ = plan_cost(SchedulingPlan((1, 1)), profs, FLEET, job)
+    assert math.isfinite(het) and het < gpu

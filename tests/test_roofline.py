@@ -1,0 +1,53 @@
+"""Roofline extraction unit tests (HLO collective parsing + terms)."""
+
+import pytest
+
+from repro.roofline import (
+    HBM_BW, LINK_BW, PEAK_FLOPS, collective_bytes_from_hlo, model_flops,
+    roofline_terms,
+)
+
+HLO = """
+  %ar = f32[16,4096] all-reduce(f32[16,4096] %x), replica_groups={}
+  %ag = bf16[8,128,64] all-gather(bf16[8,128,64] %y), dimensions={0}
+  %rs = f32[4,4] reduce-scatter(f32[4,4] %z), dimensions={0}
+  %a2a = bf16[2,2] all-to-all(bf16[2,2] %w)
+  %cp = f32[10] collective-permute(f32[10] %v)
+  %ags = (f32[8,8], f32[8,8]) all-gather-start(f32[8,8] %q), dimensions={0}
+  %agd = f32[8,8] all-gather-done(f32[8,8] %ags)
+  %dot = f32[128,128] dot(f32[128,64] %a, f32[64,128] %b)
+"""
+
+
+class TestCollectiveParsing:
+    def test_all_kinds_counted(self):
+        r = collective_bytes_from_hlo(HLO)
+        assert set(r["counts"]) == {"all-reduce", "all-gather",
+                                    "reduce-scatter", "all-to-all",
+                                    "collective-permute"}
+
+    def test_bytes_exact(self):
+        r = collective_bytes_from_hlo(HLO)
+        assert r["bytes_by_kind"]["all-reduce"] == 16 * 4096 * 4
+        # plain all-gather + async start (done not double counted)
+        assert r["bytes_by_kind"]["all-gather"] == 8 * 128 * 64 * 2 + 8 * 8 * 4
+        assert r["counts"]["all-gather"] == 2
+
+    def test_non_collectives_ignored(self):
+        r = collective_bytes_from_hlo("%dot = f32[4,4] dot(f32[4,4] %a)")
+        assert r["total_bytes"] == 0
+
+
+class TestTerms:
+    def test_dominant_identification(self):
+        t = roofline_terms(flops=PEAK_FLOPS, hbm_bytes=0.0, collective_bytes=0.0)
+        assert t["dominant"] == "compute"
+        assert t["compute_s"] == pytest.approx(1.0)
+        t = roofline_terms(flops=0.0, hbm_bytes=HBM_BW * 2, collective_bytes=0.0)
+        assert t["dominant"] == "memory"
+        t = roofline_terms(flops=0.0, hbm_bytes=0.0, collective_bytes=LINK_BW * 3)
+        assert t["dominant"] == "collective"
+        assert t["collective_s"] == pytest.approx(3.0)
+
+    def test_model_flops(self):
+        assert model_flops(1e9, 1e6) == pytest.approx(6e15)

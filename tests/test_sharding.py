@@ -1,0 +1,95 @@
+"""Sharding-rule tests (run against param templates; no devices needed)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.specs import SHAPES, input_specs, param_templates, supports
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape / .axis_names are consulted by the
+    spec builders."""
+
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+    size = 256
+
+
+MESH = FakeMesh()
+
+
+class TestParamSpecs:
+    def _specs(self, arch):
+        from repro.parallel.sharding import param_specs
+
+        cfg = get_config(arch)
+        params_t, _ = param_templates(cfg)
+        return cfg, params_t, param_specs(params_t, cfg, MESH)
+
+    def test_embed_vocab_over_model(self):
+        _, _, specs = self._specs("llama3.2-1b")
+        assert specs["embed"] == P("model", "data")
+
+    def test_stacked_block_leaves_keep_repeats_unsharded(self):
+        cfg, params_t, specs = self._specs("llama3.2-1b")
+        w1 = specs["blocks"][0]["ffn"]["w1"]
+        assert w1[0] is None  # repeats dim
+        assert "model" in w1 and "data" in w1
+
+    def test_moe_experts_over_model(self):
+        _, _, specs = self._specs("qwen3-moe-30b-a3b")
+        w1 = specs["blocks"][0]["ffn"]["w1"]   # (repeats, E, D, F)
+        assert w1[0] is None and w1[1] == "model"
+
+    def test_every_spec_divides_shape(self):
+        """A spec must never shard a non-divisible dim (would fail at jit)."""
+        for arch in ARCH_IDS:
+            cfg, params_t, specs = self._specs(arch)
+
+            def check(leaf, spec):
+                for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 9):
+                    if ax is None:
+                        continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    n = 1
+                    for a in axes:
+                        n *= MESH.shape[a]
+                    assert dim % n == 0, (arch, leaf.shape, spec)
+
+            jax.tree.map(check, params_t, specs,
+                         is_leaf=lambda x: isinstance(x, P))
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("shape", sorted(SHAPES))
+    def test_llama_all_shapes_build(self, shape):
+        if not supports(get_config("llama3.2-1b"), shape):
+            pytest.skip("unsupported")
+        step, args, specs, donate = input_specs("llama3.2-1b", shape, MESH)
+        assert len(args) == len(specs)
+        assert all(d < len(args) for d in donate)
+
+    def test_long_500k_rejected_for_full_attention(self):
+        with pytest.raises(ValueError):
+            input_specs("chatglm3-6b", "long_500k", MESH)
+
+    def test_long_500k_supported_for_ssm_hybrid_swa(self):
+        for arch in ("rwkv6-7b", "jamba-v0.1-52b", "gemma2-2b"):
+            step, args, specs, _ = input_specs(arch, "long_500k", MESH)
+            assert step is not None
+
+    def test_decode_cache_templates_sized_by_shape(self):
+        step, args, specs, _ = input_specs("llama3.2-1b", "decode_32k", MESH)
+        cache_t = args[2]
+        k = cache_t[0]["k"]
+        assert k.shape[2] == 32768  # cache length = seq_len
+        assert k.shape[1] == 128    # global batch
+
+    def test_whisper_context_in_train_batch(self):
+        step, args, specs, _ = input_specs("whisper-large-v3", "train_4k", MESH)
+        batch_t = args[2]
+        assert "context" in batch_t
+        assert batch_t["context"].shape == (256, 1500, 1280)
