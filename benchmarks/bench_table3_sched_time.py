@@ -1,11 +1,29 @@
 """Paper Table 3: scheduling time per method per model (MATCHNET, CTRDNN,
 2EMB, NCE; plus MATCHNET with 32 resource types) — RL-LSTM's time does not
-grow with the number of resource types."""
+grow with the number of resource types.
+
+Also measures the inner-loop plan-evaluation throughput (plans/s) of the
+scalar oracle vs the batched cost model — every search scheduler now
+routes plan scoring through the batched path, so this ratio is the direct
+speedup of the scheduling hot loop.
+"""
 
 from __future__ import annotations
 
+import time
+
+import numpy as np
+
 from benchmarks.common import emit, fmt_cost
-from repro.core import TrainingJob, default_fleet, make_fleet, paper_model_profiles
+from repro.core import (
+    SchedulingPlan,
+    TrainingJob,
+    batched_soft_plan_cost,
+    default_fleet,
+    make_fleet,
+    paper_model_profiles,
+    soft_plan_cost,
+)
 from repro.core.schedulers import ALL_SCHEDULERS
 
 JOB = TrainingJob()
@@ -13,7 +31,36 @@ METHODS = ("RL-LSTM", "RL-RNN", "BO", "Genetic", "Greedy", "GPU", "CPU",
            "Heuristic")
 
 
+def bench_eval_throughput(model: str = "MATCHNET", n_plans: int = 2048,
+                          seed: int = 0) -> None:
+    """Plans/s of scalar soft_plan_cost loop vs batched_soft_plan_cost."""
+    fleet = default_fleet()
+    profs = paper_model_profiles(model, fleet)
+    rng = np.random.default_rng(seed)
+    A = rng.integers(0, len(fleet), (n_plans, len(profs)))
+
+    n_scalar = min(n_plans, 256)  # the scalar loop is the slow one
+    t0 = time.perf_counter()
+    for row in A[:n_scalar]:
+        soft_plan_cost(SchedulingPlan(tuple(int(x) for x in row)),
+                       profs, fleet, JOB)
+    t_scalar = time.perf_counter() - t0
+
+    batched_soft_plan_cost(A[:8], profs, fleet, JOB)  # warm-up
+    t0 = time.perf_counter()
+    batched_soft_plan_cost(A, profs, fleet, JOB)
+    t_batched = time.perf_counter() - t0
+
+    scalar_ps = n_scalar / t_scalar
+    batched_ps = n_plans / t_batched
+    emit(f"table3/eval_throughput/{model}/scalar", t_scalar / n_scalar * 1e6,
+         f"plans_per_s={scalar_ps:.0f}")
+    emit(f"table3/eval_throughput/{model}/batched", t_batched / n_plans * 1e6,
+         f"plans_per_s={batched_ps:.0f} speedup={batched_ps / scalar_ps:.1f}x")
+
+
 def run() -> None:
+    bench_eval_throughput()
     cases = [(m, default_fleet(), "") for m in
              ("MATCHNET", "CTRDNN", "2EMB", "NCE")]
     cases.append(("MATCHNET", make_fleet(32), "(32)"))

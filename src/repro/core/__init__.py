@@ -2,12 +2,23 @@
 
 from repro.core.cost_model import (
     INFEASIBLE,
+    BatchedCost,
     TrainingJob,
+    batched_plan_cost,
+    batched_soft_plan_cost,
     monetary_cost,
     pipeline_throughput,
     plan_cost,
+    soft_plan_cost,
 )
-from repro.core.plan import ProvisioningPlan, SchedulingPlan, Stage, build_stages
+from repro.core.plan import (
+    ProvisioningPlan,
+    SchedulingPlan,
+    Stage,
+    StageBatch,
+    batched_build_stages,
+    build_stages,
+)
 from repro.core.profiles import (
     B_O,
     LAYER_KINDS,
@@ -16,7 +27,12 @@ from repro.core.profiles import (
     paper_model_profiles,
     profile_layers,
 )
-from repro.core.provision import provision, provision_sta_ratio
+from repro.core.provision import (
+    BatchedProvisioning,
+    batched_provision,
+    provision,
+    provision_sta_ratio,
+)
 from repro.core.resources import (
     CPU_CORE,
     TPU_V5E,
@@ -28,9 +44,13 @@ from repro.core.resources import (
 
 __all__ = [
     "INFEASIBLE", "TrainingJob", "monetary_cost", "pipeline_throughput",
-    "plan_cost", "ProvisioningPlan", "SchedulingPlan", "Stage",
-    "build_stages", "B_O", "LAYER_KINDS", "LayerProfile", "PAPER_MODELS",
-    "paper_model_profiles", "profile_layers", "provision",
+    "plan_cost", "soft_plan_cost", "ProvisioningPlan", "SchedulingPlan",
+    "Stage", "build_stages", "B_O", "LAYER_KINDS", "LayerProfile",
+    "PAPER_MODELS", "paper_model_profiles", "profile_layers", "provision",
     "provision_sta_ratio", "CPU_CORE", "TPU_V5E", "V100", "ResourceType",
     "default_fleet", "make_fleet",
+    # batched evaluation path
+    "BatchedCost", "StageBatch", "BatchedProvisioning",
+    "batched_plan_cost", "batched_soft_plan_cost", "batched_build_stages",
+    "batched_provision",
 ]

@@ -17,10 +17,14 @@ import dataclasses
 import math
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.plan import (
     ProvisioningPlan,
     SchedulingPlan,
     Stage,
+    StageBatch,
+    batched_build_stages,
     build_stages,
     type_counts,
 )
@@ -96,13 +100,16 @@ def monetary_cost(
     job: TrainingJob,
     *,
     check_limits: bool = True,
+    stages: Sequence[Stage] | None = None,
 ) -> float:
     """Formula 7 with the Formula-10 constraints.
 
     Returns :data:`INFEASIBLE` when the throughput constraint or a
-    per-type resource limit is violated.
+    per-type resource limit is violated.  ``stages`` lets callers share
+    already-built stages.
     """
-    stages = build_stages(plan, profiles, fleet)
+    if stages is None:
+        stages = build_stages(plan, profiles, fleet)
     if len(prov.k) != len(stages):
         raise ValueError(f"{len(prov.k)} k's for {len(stages)} stages")
     counts = type_counts(plan, prov, len(fleet))
@@ -122,20 +129,25 @@ def plan_cost(
     profiles: Sequence[LayerProfile],
     fleet: Sequence[ResourceType],
     job: TrainingJob,
+    *,
+    stages: Sequence[Stage] | None = None,
 ) -> tuple[float, ProvisioningPlan | None]:
     """Cost of a scheduling plan = cost under its best provisioning (§5).
 
     This is the reward the RL scheduler optimizes (Algorithm 1, Line 5):
     the provisioning module is invoked inside the cost evaluation.
+    ``stages`` lets callers that already built the plan's stages share
+    them instead of re-deriving.
     """
     from repro.core.provision import provision  # cycle-free late import
 
-    stages = build_stages(plan, profiles, fleet)
+    if stages is None:
+        stages = build_stages(plan, profiles, fleet)
     prov = provision(stages, fleet, job)
     if prov is None:
         return INFEASIBLE, None
     return (
-        monetary_cost(plan, prov, profiles, fleet, job),
+        monetary_cost(plan, prov, profiles, fleet, job, stages=stages),
         prov,
     )
 
@@ -145,6 +157,9 @@ def soft_plan_cost(
     profiles: Sequence[LayerProfile],
     fleet: Sequence[ResourceType],
     job: TrainingJob,
+    *,
+    stages: Sequence[Stage] | None = None,
+    cost: float | None = None,
 ) -> float:
     """Graded surrogate for search rewards (beyond-paper refinement).
 
@@ -155,15 +170,21 @@ def soft_plan_cost(
     throughput and scale the cost by the squared constraint-violation
     ratio — infeasible plans are ordered by how infeasible they are.
     Feasible plans return their true cost.
+
+    ``stages``/``cost`` let callers that already evaluated the plan (e.g.
+    ``CostCache``) share that work instead of re-running ``build_stages``
+    and the full provisioning search.
     """
     import dataclasses as _dc
 
     from repro.core.provision import provision
 
-    cost, _ = plan_cost(plan, profiles, fleet, job)
+    if stages is None:
+        stages = build_stages(plan, profiles, fleet)
+    if cost is None:
+        cost, _ = plan_cost(plan, profiles, fleet, job, stages=stages)
     if math.isfinite(cost):
         return cost
-    stages = build_stages(plan, profiles, fleet)
     tp_max = min(
         stage_throughput(s, fleet[s.resource_type].max_count, job.batch_size)
         for s in stages
@@ -172,11 +193,176 @@ def soft_plan_cost(
         return 1e15
     relaxed = _dc.replace(job, throughput_limit=min(tp_max * 0.5,
                                                     job.throughput_limit))
-    stages_r = build_stages(plan, profiles, fleet)
-    prov = provision(stages_r, fleet, relaxed)
+    prov = provision(stages, fleet, relaxed)
     if prov is None:
         return 1e15
     base = monetary_cost(plan, prov, profiles, fleet, relaxed,
-                         check_limits=False)
+                         check_limits=False, stages=stages)
     violation = max(job.throughput_limit / max(tp_max, 1e-9), 1.0)
     return base * 10.0 * violation**2
+
+
+# --- batched evaluation (Formulas 1–7 over N plans at once) ------------------
+#
+# The scalar functions above remain the reference oracle; the batched path
+# below evaluates an (N, L) assignment batch with NumPy array ops and a
+# vectorized provisioning search (see provision.batched_provision).  Each
+# plan's arithmetic follows the same operation sequence as the scalar path,
+# so results agree bit-for-bit (tested in tests/test_batched_cost.py).
+
+
+#: plans per vectorized slice — around this size the working set of (N, S)
+#: temporaries stays cache-resident; larger batches are internally chunked
+#: (throughput falls off a cliff once the Newton loop spills to DRAM)
+EVAL_CHUNK = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedCost:
+    """Result of :func:`batched_plan_cost` for N plans.
+
+    ``costs[i]`` is the true monetary cost (:data:`INFEASIBLE` when no
+    feasible provisioning exists); ``prov(i)`` materializes plan ``i``'s
+    chosen provisioning as a scalar :class:`ProvisioningPlan`.
+    """
+
+    costs: np.ndarray       # (N,)
+    k: np.ndarray           # (N, S) int replica counts (0 past num_stages)
+    ps_cores: np.ndarray    # (N,) int
+    num_stages: np.ndarray  # (N,) int
+    feasible: np.ndarray    # (N,) bool
+
+    def prov(self, i: int) -> ProvisioningPlan | None:
+        if not self.feasible[i]:
+            return None
+        n = int(self.num_stages[i])
+        return ProvisioningPlan(
+            k=tuple(int(x) for x in self.k[i, :n]),
+            ps_cores=int(self.ps_cores[i]),
+        )
+
+
+def _concat_batched(parts: list[BatchedCost]) -> BatchedCost:
+    """Stack chunked results; pad ``k`` to the widest stage count."""
+    S = max(p.k.shape[1] for p in parts)
+    ks = []
+    for p in parts:
+        pad = S - p.k.shape[1]
+        ks.append(np.pad(p.k, ((0, 0), (0, pad))) if pad else p.k)
+    return BatchedCost(
+        costs=np.concatenate([p.costs for p in parts]),
+        k=np.concatenate(ks),
+        ps_cores=np.concatenate([p.ps_cores for p in parts]),
+        num_stages=np.concatenate([p.num_stages for p in parts]),
+        feasible=np.concatenate([p.feasible for p in parts]),
+    )
+
+
+def _batched_monetary_cost(
+    sb: StageBatch,
+    k: np.ndarray,
+    ps: np.ndarray,
+    fleet: Sequence[ResourceType],
+    job: TrainingJob,
+) -> np.ndarray:
+    """Formulas 5–7 for integer provisioning, no constraint checks."""
+    from repro.core.provision import (
+        _batched_int_throughput,
+        _batched_type_counts,
+    )
+
+    tp = _batched_int_throughput(sb, k, job.batch_size)
+    et = float(job.num_epochs * job.num_examples) / tp
+    counts = _batched_type_counts(sb, k, ps, len(fleet))
+    # left fold in fleet order == the scalar sum() over types
+    rate = np.zeros(sb.batch)
+    for t, res in enumerate(fleet):
+        rate = rate + counts[:, t] * res.price_per_sec
+    return et * rate
+
+
+def batched_plan_cost(
+    assignments: np.ndarray,
+    profiles: Sequence[LayerProfile],
+    fleet: Sequence[ResourceType],
+    job: TrainingJob,
+) -> BatchedCost:
+    """Vectorized :func:`plan_cost` over an ``(N, L)`` assignment batch."""
+    from repro.core.provision import batched_provision
+
+    assignments = np.asarray(assignments, dtype=np.int64)
+    if len(assignments) > EVAL_CHUNK:
+        return _concat_batched([
+            batched_plan_cost(assignments[i:i + EVAL_CHUNK], profiles, fleet, job)
+            for i in range(0, len(assignments), EVAL_CHUNK)
+        ])
+    sb = batched_build_stages(assignments, profiles, fleet)
+    bp = batched_provision(sb, fleet, job)
+    cost = np.where(
+        bp.feasible,
+        _batched_monetary_cost(sb, bp.k, bp.ps_cores, fleet, job),
+        INFEASIBLE,
+    )
+    return BatchedCost(
+        costs=cost, k=bp.k, ps_cores=bp.ps_cores,
+        num_stages=sb.num_stages, feasible=bp.feasible,
+    )
+
+
+def batched_soft_plan_cost(
+    assignments: np.ndarray,
+    profiles: Sequence[LayerProfile],
+    fleet: Sequence[ResourceType],
+    job: TrainingJob,
+) -> tuple[BatchedCost, np.ndarray]:
+    """Vectorized (:func:`plan_cost`, :func:`soft_plan_cost`) in one pass.
+
+    Returns the true-cost batch plus the graded surrogate vector; the
+    stage arrays and true-cost provisioning are computed once and shared
+    (the batched analogue of the ``CostCache.soft`` single-evaluation
+    path).  Only the infeasible subset pays for the relaxed re-provision.
+    """
+    from repro.core.provision import _batched_int_throughput, batched_provision
+
+    assignments = np.asarray(assignments, dtype=np.int64)
+    if len(assignments) > EVAL_CHUNK:
+        parts = [
+            batched_soft_plan_cost(assignments[i:i + EVAL_CHUNK], profiles, fleet, job)
+            for i in range(0, len(assignments), EVAL_CHUNK)
+        ]
+        return (
+            _concat_batched([bc for bc, _ in parts]),
+            np.concatenate([s for _, s in parts]),
+        )
+    sb = batched_build_stages(assignments, profiles, fleet)
+    bp = batched_provision(sb, fleet, job)
+    cost = np.where(
+        bp.feasible,
+        _batched_monetary_cost(sb, bp.k, bp.ps_cores, fleet, job),
+        INFEASIBLE,
+    )
+    soft = cost.copy()
+    bad = ~np.isfinite(cost)
+    if bad.any():
+        idx = np.flatnonzero(bad)
+        sub = sb.take(idx)
+        # max achievable pipeline throughput: every stage at its type's limit
+        max_counts = np.array([r.max_count for r in fleet])
+        tp_max = _batched_int_throughput(
+            sub, np.where(sub.mask, max_counts[sub.rtype], 0), job.batch_size
+        )
+        relaxed = np.minimum(tp_max * 0.5, float(job.throughput_limit))
+        bp_r = batched_provision(sub, fleet, job, tau_min=relaxed)
+        base = _batched_monetary_cost(sub, bp_r.k, bp_r.ps_cores, fleet, job)
+        violation = np.maximum(
+            float(job.throughput_limit) / np.maximum(tp_max, 1e-9), 1.0
+        )
+        graded = base * 10.0 * violation**2
+        soft[idx] = np.where(bp_r.feasible & (tp_max > 0), graded, 1e15)
+    return (
+        BatchedCost(
+            costs=cost, k=bp.k, ps_cores=bp.ps_cores,
+            num_stages=sb.num_stages, feasible=bp.feasible,
+        ),
+        soft,
+    )

@@ -11,6 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.profiles import LayerProfile
 from repro.core.resources import ResourceType
 
@@ -98,6 +100,97 @@ def build_stages(
             )
         )
     return stages
+
+
+@dataclasses.dataclass(frozen=True)
+class StageBatch:
+    """Stage-level arrays for ``N`` plans at once (batched ``build_stages``).
+
+    All per-stage arrays are ``(N, S)`` where ``S`` is the maximum stage
+    count in the batch; slots at or past a plan's ``num_stages[n]`` are
+    invalid (``mask`` False, zero oct/odt, type 0).  Per-plan reductions
+    over the stage axis must exclude invalid slots.
+    """
+
+    rtype: np.ndarray       # (N, S) int — resource type per stage
+    oct: np.ndarray         # (N, S) — aggregate OCT per stage
+    odt: np.ndarray         # (N, S) — aggregate ODT per stage
+    alpha: np.ndarray       # (N, S) — OCT-weighted Amdahl compute fraction
+    beta: np.ndarray        # (N, S) — OCT-weighted Amdahl comm fraction
+    mask: np.ndarray        # (N, S) bool — valid stage slots
+    num_stages: np.ndarray  # (N,) int
+
+    @property
+    def batch(self) -> int:
+        return self.oct.shape[0]
+
+    @property
+    def max_stages(self) -> int:
+        return self.oct.shape[1]
+
+    def take(self, idx: np.ndarray) -> "StageBatch":
+        """Row subset (used to rescue only the infeasible plans)."""
+        return StageBatch(
+            rtype=self.rtype[idx], oct=self.oct[idx], odt=self.odt[idx],
+            alpha=self.alpha[idx], beta=self.beta[idx], mask=self.mask[idx],
+            num_stages=self.num_stages[idx],
+        )
+
+
+def batched_build_stages(
+    assignments: np.ndarray,
+    profiles: Sequence[LayerProfile],
+    fleet: Sequence[ResourceType],
+) -> StageBatch:
+    """Vectorized :func:`build_stages` over an ``(N, L)`` assignment batch.
+
+    Stage aggregation uses ``np.bincount`` segment sums, which accumulate
+    in flat-index (= layer) order — the same left-fold order as the scalar
+    ``sum()`` — so per-stage aggregates match the scalar path bit-for-bit.
+    """
+    A = np.asarray(assignments, dtype=np.int64)
+    if A.ndim != 2:
+        raise ValueError(f"assignments must be (N, L), got shape {A.shape}")
+    N, L = A.shape
+    if L != len(profiles):
+        raise ValueError(f"{L} layers assigned, {len(profiles)} profiled")
+
+    OCT = np.array([p.oct for p in profiles])        # (L, T)
+    SYNC = np.array([p.odt_sync for p in profiles])  # (L, T)
+    ACT = np.array([p.odt_act for p in profiles])    # (L, T)
+    AL = np.array([p.alpha for p in profiles])       # (L,)
+    BE = np.array([p.beta for p in profiles])        # (L,)
+
+    lay = np.arange(L)
+    oct_l = OCT[lay, A]                              # (N, L)
+    sync_l = SYNC[lay, A]
+    act_l = ACT[lay, A]
+
+    change = np.ones((N, L), dtype=bool)
+    change[:, 1:] = A[:, 1:] != A[:, :-1]
+    sid = np.cumsum(change, axis=1) - 1              # (N, L) stage id per layer
+    num_stages = sid[:, -1] + 1
+    S = int(num_stages.max())
+    flat = (np.arange(N)[:, None] * S + sid).ravel()
+
+    def seg(v: np.ndarray) -> np.ndarray:
+        return np.bincount(flat, weights=v.ravel(), minlength=N * S).reshape(N, S)
+
+    oct_s = seg(oct_l)
+    # activation hand-off counts only for the last layer of each stage
+    is_last = np.ones((N, L), dtype=bool)
+    is_last[:, :-1] = change[:, 1:]
+    odt_s = seg(sync_l) + seg(np.where(is_last, act_l, 0.0))
+    w = np.maximum(oct_s, 1e-30)
+    alpha_s = seg(AL[None, :] * oct_l) / w
+    beta_s = seg(BE[None, :] * oct_l) / w
+    rtype = np.zeros((N, S), dtype=np.int64)
+    rtype[np.arange(N)[:, None], sid] = A
+    mask = np.arange(S)[None, :] < num_stages[:, None]
+    return StageBatch(
+        rtype=rtype, oct=oct_s, odt=odt_s, alpha=alpha_s, beta=beta_s,
+        mask=mask, num_stages=num_stages,
+    )
 
 
 def type_counts(

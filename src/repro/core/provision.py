@@ -14,14 +14,17 @@ BytePS-style).
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Sequence
+
+import numpy as np
 
 from repro.core.cost_model import (
     TrainingJob,
     stage_throughput,
 )
-from repro.core.plan import ProvisioningPlan, Stage
+from repro.core.plan import ProvisioningPlan, Stage, StageBatch
 from repro.core.profiles import B_O
 from repro.core.resources import ResourceType
 
@@ -159,7 +162,191 @@ def provision(
     return ProvisioningPlan(k=tuple(k_int), ps_cores=ps)
 
 
-# --- static baselines (§6.1) -------------------------------------------------
+# --- batched provisioning (vectorized over N plans) --------------------------
+#
+# The scalar `provision` above is the reference oracle; the functions below
+# run the same algorithm — continuous balanced-k inversion of Formulas 1–4,
+# Newton iteration on the throughput target τ, integer rounding, limit and
+# throughput checks — for N plans at once with NumPy.  Per-plan reductions
+# over the stage axis are written as explicit left folds so each plan's
+# arithmetic is the same operation sequence as the scalar path (see
+# DESIGN.md, "Batched provisioning").
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedProvisioning:
+    """Integer provisioning for a :class:`StageBatch` (invalid slots k=0)."""
+
+    k: np.ndarray         # (N, S) int replica counts
+    ps_cores: np.ndarray  # (N,) int
+    feasible: np.ndarray  # (N,) bool — limits + throughput constraint hold
+
+
+@dataclasses.dataclass(frozen=True)
+class _ProvisionCtx:
+    """Loop-invariant arrays for one batched provisioning run."""
+
+    tc: np.ndarray           # (N, S) per-example compute time  (oct / B_o)
+    tm: np.ndarray           # (N, S) per-example comm time     (odt / B_o)
+    alpha: np.ndarray        # (N, S)
+    beta: np.ndarray         # (N, S)
+    na: np.ndarray           # (N, S) 1 - alpha
+    nb: np.ndarray           # (N, S) 1 - beta
+    mask: np.ndarray         # (N, S)
+    stage_price: np.ndarray  # (N, S) price/s per stage (0 in invalid slots)
+    accel: np.ndarray        # (N, S) 1.0 where the stage is on an accelerator
+    cpu_price: float
+    et_num: float            # num_epochs * num_examples
+
+
+def _provision_ctx(
+    sb: StageBatch, fleet: Sequence[ResourceType], job: TrainingJob
+) -> _ProvisionCtx:
+    price = np.array([r.price_per_sec for r in fleet])
+    return _ProvisionCtx(
+        tc=sb.oct / B_O, tm=sb.odt / B_O,
+        alpha=sb.alpha, beta=sb.beta,
+        na=1.0 - sb.alpha, nb=1.0 - sb.beta,
+        mask=sb.mask,
+        stage_price=np.where(sb.mask, price[sb.rtype], 0.0),
+        accel=np.where(sb.mask & (sb.rtype != 0), 1.0, 0.0),
+        cpu_price=float(price[0]),
+        et_num=float(job.num_epochs * job.num_examples),
+    )
+
+
+def _batched_required_k(ctx: _ProvisionCtx, throughput: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`required_k`: (N, S) continuous k at per-plan τ.
+
+    Invalid stage slots (zero oct/odt) come out as the clamp value 1.0;
+    callers must mask them out.  A valid slot past its Amdahl ceiling is
+    ``inf`` — no replica count reaches the target throughput.
+    """
+    budget = 1.0 / throughput[:, None]                   # (N, 1) s/example
+    out = np.full_like(ctx.tc, 1.0)
+    for time_per_ex, frac, nfrac in (
+        (ctx.tc, ctx.alpha, ctx.na), (ctx.tm, ctx.beta, ctx.nb)
+    ):
+        slack = budget / time_per_ex - nfrac
+        k = np.where(slack > 0.0, frac / slack, np.inf)
+        k = np.where(time_per_ex <= 0.0, 0.0, k)
+        out = np.maximum(out, k)
+    return out
+
+
+def _batched_cost_at_throughput(
+    ctx: _ProvisionCtx, throughput: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized `_cost_at_throughput`: per-plan continuous cost + ks.
+
+    Returns ``(cost (N,), ks (N, S))`` with ``cost = inf`` where any stage
+    hits its Amdahl ceiling (the scalar path's ``(inf, None)``).
+    ``cumsum`` is a sequential in-order fold over the stage axis, so the
+    sums match the scalar left-fold ``sum()`` bit-for-bit (invalid slots
+    contribute exactly 0.0, which is a no-op on any finite partial sum).
+    """
+    ks = _batched_required_k(ctx, throughput)
+    ksm = np.where(ctx.mask, ks, 0.0)
+    ok = np.isfinite(ksm).all(axis=1)
+    rate = (ksm * ctx.stage_price).cumsum(axis=1)[:, -1]
+    accel = (ksm * ctx.accel).cumsum(axis=1)[:, -1]
+    ps = np.where(accel > 0.0, np.ceil(accel / 6.0), 0.0)
+    rate = rate + ps * ctx.cpu_price
+    cost = np.where(ok, (ctx.et_num / throughput) * rate, np.inf)
+    return cost, ksm
+
+
+def _batched_int_throughput(
+    sb: StageBatch, k: np.ndarray, batch_size: int
+) -> np.ndarray:
+    """Pipeline throughput (Formula 5) under integer replica counts."""
+    k_eff = np.maximum(k, 1).astype(np.float64)
+    ct = (sb.oct / B_O) * batch_size * (1.0 - sb.alpha + sb.alpha / k_eff)
+    dt = (sb.odt / B_O) * batch_size * (1.0 - sb.beta + sb.beta / k_eff)
+    ex = np.maximum(ct, dt)
+    with np.errstate(divide="ignore"):
+        tp_s = np.where(sb.mask & (ex > 0.0), batch_size / np.where(ex > 0.0, ex, 1.0), np.inf)
+    return tp_s.min(axis=1)
+
+
+def _batched_type_counts(
+    sb: StageBatch, k: np.ndarray, ps: np.ndarray, num_types: int
+) -> np.ndarray:
+    """(N, T) total units per resource type (Formula 7 / type_counts)."""
+    counts = np.zeros((sb.batch, num_types))
+    np.add.at(counts, (np.arange(sb.batch)[:, None], sb.rtype), k.astype(np.float64))
+    counts[:, 0] += ps
+    return counts
+
+
+def batched_provision(
+    sb: StageBatch,
+    fleet: Sequence[ResourceType],
+    job: TrainingJob,
+    *,
+    tau_min: np.ndarray | None = None,
+    newton_iters: int = 25,
+) -> BatchedProvisioning:
+    """Vectorized :func:`provision` over a :class:`StageBatch`.
+
+    ``tau_min`` optionally overrides the throughput target per plan (the
+    graded-surrogate path relaxes it per plan); defaults to the job's
+    ``throughput_limit`` everywhere.
+    """
+    N = sb.batch
+    if tau_min is None:
+        tau_min = np.full(N, float(job.throughput_limit))
+    else:
+        tau_min = np.asarray(tau_min, dtype=np.float64)
+
+    ctx = _provision_ctx(sb, fleet, job)
+    with np.errstate(all="ignore"):
+        c0, _ = _batched_cost_at_throughput(ctx, tau_min)
+        alive = np.isfinite(c0)
+
+        tau = tau_min.copy()
+        best_tau = tau_min.copy()
+        best_cost = c0.copy()
+        cc = c0  # cost at the current tau; carried across iterations
+        h = np.maximum(tau_min * 1e-4, 1e-9)
+        active = alive.copy()
+        for _ in range(newton_iters):
+            if not active.any():
+                break
+            cm, _ = _batched_cost_at_throughput(ctx, np.maximum(tau - h, tau_min))
+            cp, _ = _batched_cost_at_throughput(ctx, tau + h)
+            active &= np.isfinite(cm) & np.isfinite(cp) & np.isfinite(cc)
+            g = (cp - cm) / (2 * h)
+            hess = (cp - 2 * cc + cm) / (h * h)
+            step = np.where(
+                (hess <= 0.0) | ~np.isfinite(hess),
+                -np.copysign(0.1 * tau, g),
+                -g / hess,
+            )
+            new_tau = np.where(active, np.maximum(tau_min, tau + step), tau)
+            c_new, _ = _batched_cost_at_throughput(ctx, new_tau)
+            better = active & np.isfinite(c_new) & (c_new < best_cost)
+            best_cost = np.where(better, c_new, best_cost)
+            best_tau = np.where(better, new_tau, best_tau)
+            converged = np.abs(new_tau - tau) < 1e-6 * tau_min
+            tau = new_tau
+            cc = c_new  # next iteration's cost-at-tau, already evaluated
+            active &= ~converged
+
+        _, ks = _batched_cost_at_throughput(ctx, best_tau)
+    k_int = np.where(
+        alive[:, None] & sb.mask, np.ceil(np.where(alive[:, None], ks, 0.0)), 0.0
+    ).astype(np.int64)
+
+    # Feasibility: per-type limits (Formula 10) + throughput under integer k.
+    accel = (np.where(sb.rtype != 0, k_int, 0)).sum(axis=1)
+    ps = np.where(accel > 0, np.ceil(accel / 6.0), 0.0).astype(np.int64)
+    counts = _batched_type_counts(sb, k_int, ps, len(fleet))
+    max_counts = np.array([r.max_count for r in fleet])
+    limit_ok = (counts <= max_counts[None, :]).all(axis=1)
+    tp = _batched_int_throughput(sb, k_int, job.batch_size)
+    feasible = alive & limit_ok & (tp >= tau_min)
+    return BatchedProvisioning(k=k_int, ps_cores=ps, feasible=feasible)
 
 
 def provision_sta_ratio(

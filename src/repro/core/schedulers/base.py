@@ -8,7 +8,15 @@ import math
 import time
 from typing import Sequence
 
-from repro.core.cost_model import INFEASIBLE, TrainingJob, plan_cost
+import numpy as np
+
+from repro.core.cost_model import (
+    INFEASIBLE,
+    TrainingJob,
+    batched_plan_cost,
+    batched_soft_plan_cost,
+    plan_cost,
+)
 from repro.core.plan import ProvisioningPlan, SchedulingPlan
 from repro.core.profiles import LayerProfile
 from repro.core.resources import ResourceType
@@ -61,9 +69,14 @@ class Scheduler(abc.ABC):
 class CostCache:
     """Memoizes ``plan_cost`` across a search (plans repeat a lot in GA/RL).
 
-    ``soft()`` returns the graded surrogate (finite for infeasible plans,
-    ordered by violation) used as search reward; ``__call__`` returns the
-    true cost (``inf`` when infeasible) used for final plan selection.
+    ``soft()``/``batch_soft()`` return the graded surrogate (finite for
+    infeasible plans, ordered by violation) used as search reward;
+    ``__call__``/``batch_call()`` return the true cost (``inf`` when
+    infeasible) used for final plan selection.  Scoring goes through the
+    batched cost model (``batched_plan_cost``/``batched_soft_plan_cost``):
+    each batch is deduplicated, novel plans are evaluated in one
+    vectorized pass, and the true cost + surrogate come out of a single
+    shared evaluation (no double provisioning for infeasible plans).
     """
 
     def __init__(self, profiles, fleet, job):
@@ -72,27 +85,58 @@ class CostCache:
         self._soft: dict[tuple[int, ...], float] = {}
         self.evaluations = 0
 
+    @staticmethod
+    def _keys(assignments) -> list[tuple[int, ...]]:
+        return [tuple(int(a) for a in row) for row in assignments]
+
+    def batch_call(self, assignments) -> np.ndarray:
+        """True costs for a batch of assignment vectors (dedup + memo)."""
+        keys = self._keys(assignments)
+        novel = [k for k in dict.fromkeys(keys) if k not in self._cache]
+        if novel:
+            bc = batched_plan_cost(
+                np.asarray(novel, dtype=np.int64),
+                self.profiles, self.fleet, self.job,
+            )
+            self.evaluations += len(novel)
+            for k, c in zip(novel, bc.costs):
+                self._cache[k] = float(c)
+        return np.array([self._cache[k] for k in keys])
+
+    def batch_soft(self, assignments) -> np.ndarray:
+        """Graded surrogate costs for a batch (dedup + memo, single pass)."""
+        keys = self._keys(assignments)
+        need: list[tuple[int, ...]] = []
+        for k in dict.fromkeys(keys):
+            if k in self._soft:
+                continue
+            cached = self._cache.get(k)
+            if cached is not None and math.isfinite(cached):
+                self._soft[k] = cached  # feasible → surrogate == true cost
+            else:
+                need.append(k)
+        if need:
+            bc, soft = batched_soft_plan_cost(
+                np.asarray(need, dtype=np.int64),
+                self.profiles, self.fleet, self.job,
+            )
+            for k, c, s in zip(need, bc.costs, soft):
+                if k not in self._cache:
+                    self.evaluations += 1
+                    self._cache[k] = float(c)
+                self._soft[k] = float(s)
+        return np.array([self._soft[k] for k in keys])
+
     def __call__(self, assignment: Sequence[int]) -> float:
         key = tuple(int(a) for a in assignment)
         if key not in self._cache:
-            self.evaluations += 1
-            cost, _ = plan_cost(
-                SchedulingPlan(key), self.profiles, self.fleet, self.job
-            )
-            self._cache[key] = cost
+            self.batch_call([key])
         return self._cache[key]
 
     def soft(self, assignment: Sequence[int]) -> float:
-        from repro.core.cost_model import soft_plan_cost
-
         key = tuple(int(a) for a in assignment)
         if key not in self._soft:
-            cost = self(key)
-            self._soft[key] = (
-                cost if math.isfinite(cost) else soft_plan_cost(
-                    SchedulingPlan(key), self.profiles, self.fleet, self.job
-                )
-            )
+            self.batch_soft([key])
         return self._soft[key]
 
     def best(self) -> tuple[tuple[int, ...], float]:

@@ -54,8 +54,11 @@ class BayesianScheduler(Scheduler):
             X.append(plan)
             y.append(math.log10(c + 1.0))  # log costs: GP-friendlier scale
 
-        for _ in range(self.init_random):
-            observe(tuple(rng.randrange(T) for _ in range(L)))
+        init = [tuple(rng.randrange(T) for _ in range(L))
+                for _ in range(self.init_random)]
+        cache.batch_soft(init)  # score the whole warm-up set in one pass
+        for plan in init:
+            observe(plan)
 
         for _ in range(self.num_iters - self.init_random):
             Xa = np.array(X, dtype=np.int64)

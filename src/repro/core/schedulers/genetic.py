@@ -37,6 +37,7 @@ class GeneticScheduler(Scheduler):
             return cache.soft(ind)  # graded infeasibility (see CostCache)
 
         for _ in range(self.generations):
+            cache.batch_soft(pop)  # score the generation in one pass
             scored = sorted(pop, key=fitness)
             nxt = scored[: self.elite]
             while len(nxt) < self.population:

@@ -86,12 +86,12 @@ class RLScheduler(Scheduler):
         # plan") and the AIBox heuristic (data-intensive layers → type 0).
         # The final plan is best-of(search ∪ anchors), so RL never returns
         # worse than the static heuristics it subsumes.
-        for t in range(T):
-            cache((t,) * L)
+        anchors = [(t,) * L for t in range(T)]
         if T > 1:
-            cache(tuple(
+            anchors.append(tuple(
                 0 if p.kind in ("embedding", "nce") else 1 for p in profiles
             ))
+        cache.batch_call(anchors)
         b = 0.0  # moving-average baseline (Algorithm 1, Line 1)
         b_init = False
         best_cost, best_since = float("inf"), 0
@@ -107,8 +107,9 @@ class RLScheduler(Scheduler):
             actions = np.asarray(actions)
             # graded surrogate: infeasible plans get finite costs ordered
             # by violation — keeps the REINFORCE signal alive even when a
-            # whole round samples infeasible plans (see soft_plan_cost)
-            costs = np.array([cache.soft(a) for a in actions])
+            # whole round samples infeasible plans (see soft_plan_cost);
+            # the whole round is scored in one vectorized pass
+            costs = cache.batch_soft(actions)
             # reward: negative log-cost — scale-free across models/fleets
             rewards = -np.log10(costs + 1e-12)
 

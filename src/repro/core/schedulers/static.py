@@ -6,6 +6,8 @@ import itertools
 import math
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.cost_model import TrainingJob
 from repro.core.plan import SchedulingPlan
 from repro.core.profiles import LayerProfile
@@ -29,11 +31,11 @@ class GPUOnlyScheduler(Scheduler):
 
     def _search(self, profiles, fleet, job):
         cache = CostCache(profiles, fleet, job)
-        best_t, best_c = 1, float("inf")
-        for t in range(1, len(fleet)):
-            c = cache((t,) * len(profiles))
-            if c < best_c:
-                best_t, best_c = t, c
+        plans = [(t,) * len(profiles) for t in range(1, len(fleet))]
+        costs = cache.batch_call(plans)
+        best_t = 1
+        if np.isfinite(costs).any():
+            best_t = 1 + int(np.argmin(costs))
         return SchedulingPlan((best_t,) * len(profiles)), cache.evaluations, {}
 
 
@@ -56,18 +58,25 @@ class BruteForceScheduler(Scheduler):
 
     name = "BF"
 
-    def __init__(self, max_evals: int = 2_000_000):
+    def __init__(self, max_evals: int = 2_000_000, chunk: int = 4096):
         self.max_evals = max_evals
+        self.chunk = chunk
 
     def _search(self, profiles, fleet, job):
         T, L = len(fleet), len(profiles)
         cache = CostCache(profiles, fleet, job)
         n = 0
+        batch: list[tuple[int, ...]] = []
         for assignment in itertools.product(range(T), repeat=L):
-            cache(assignment)
+            batch.append(assignment)
             n += 1
+            if len(batch) >= self.chunk:
+                cache.batch_call(batch)
+                batch.clear()
             if n >= self.max_evals:
                 break
+        if batch:
+            cache.batch_call(batch)
         best, _ = cache.best()
         return SchedulingPlan(best), cache.evaluations, {"exhaustive": T**L <= self.max_evals}
 
@@ -96,12 +105,13 @@ class GreedyScheduler(Scheduler):
         suffix = [local_best(p) for p in profiles]
         chosen: list[int] = []
         for l in range(L):
-            best_t, best_c = suffix[l], float("inf")
-            for t in range(T):
-                cand = tuple(chosen) + (t,) + tuple(suffix[l + 1:])
-                c = cache(cand)
-                if c < best_c:
-                    best_t, best_c = t, c
+            cands = [tuple(chosen) + (t,) + tuple(suffix[l + 1:])
+                     for t in range(T)]
+            costs = cache.batch_call(cands)  # all T candidates in one pass
+            if np.isfinite(costs).any():
+                best_t = int(np.argmin(costs))
+            else:
+                best_t = suffix[l]
             chosen.append(best_t)
         plan = tuple(chosen)
         if not math.isfinite(cache(plan)):

@@ -56,19 +56,60 @@ class SyntheticTokenDataset:
             i += 1
 
 
+#: queue marker ending the stream — lets a consumer blocked in ``get()``
+#: observe producer shutdown instead of hanging forever
+_SENTINEL = object()
+
+
 class PrefetchLoader:
     """Background prefetch with a bounded queue (HeterPS prefetches input
-    data into worker memory ahead of the consuming stage)."""
+    data into worker memory ahead of the consuming stage).
 
-    def __init__(self, dataset, depth: int = 2):
+    Shutdown contract: the worker only ever blocks in *timed* puts, so it
+    observes ``close()`` promptly even when the queue is full; on exit
+    (dataset exhausted or ``close()``) it always enqueues a sentinel, so a
+    consumer blocked in ``__next__`` wakes up and gets ``StopIteration``
+    rather than hanging on an empty queue.
+    """
+
+    def __init__(self, dataset, depth: int = 2, put_timeout: float = 0.05):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._done = False
+        self._put_timeout = put_timeout
 
         def worker():
-            for b in dataset:
-                if self._stop.is_set():
-                    return
-                self._q.put(b)
+            try:
+                for b in dataset:
+                    placed = False
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put(b, timeout=self._put_timeout)
+                            placed = True
+                            break
+                        except queue.Full:
+                            continue
+                    if not placed:
+                        return  # close() requested while queue stayed full
+            finally:
+                # Always terminate the stream.  If close() was requested and
+                # the queue is full, make room by dropping buffered batches
+                # (the consumer is gone).  Without close() we must not drop
+                # data — a slow consumer may still drain — so back off
+                # exponentially instead of spinning while we wait for room.
+                wait = self._put_timeout
+                while True:
+                    try:
+                        self._q.put(_SENTINEL, timeout=wait)
+                        return
+                    except queue.Full:
+                        if self._stop.is_set():
+                            try:
+                                self._q.get_nowait()
+                            except queue.Empty:
+                                pass
+                        else:
+                            wait = min(wait * 2, 1.0)
 
         self._t = threading.Thread(target=worker, daemon=True)
         self._t.start()
@@ -77,14 +118,18 @@ class PrefetchLoader:
         return self
 
     def __next__(self):
-        return self._q.get()
+        if self._done:
+            raise StopIteration
+        item = self._q.get()
+        if item is _SENTINEL:
+            self._done = True
+            raise StopIteration
+        return item
 
-    def close(self):
+    def close(self, timeout: float = 5.0):
+        """Stop the worker; safe to call repeatedly / with a blocked consumer."""
         self._stop.set()
-        try:
-            self._q.get_nowait()
-        except queue.Empty:
-            pass
+        self._t.join(timeout)
 
 
 def shard_batch(batch: dict, mesh, batch_axes=("pod", "data")) -> dict:

@@ -1,0 +1,8 @@
+"""Pallas API compatibility across jax versions (see DESIGN.md)."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 ships this as TPUCompilerParams; newer jax renamed it.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def _kernel(ids_ref, table_ref, out_ref, acc_ref, *, bag: int):
     b = pl.program_id(1)
@@ -60,7 +62,7 @@ def embedding_bag(ids, table, *, interpret: bool = False):
         functools.partial(_kernel, bag=bag),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((N, dim), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,82 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test suite's property tests use a small, fixed subset of the
+hypothesis API (``@given``/``@settings`` with ``st.integers``,
+``st.floats``, ``st.lists``, ``st.sampled_from``).  When the real
+library is available the test modules import it directly; otherwise
+they fall back to this shim, which replays each property test over a
+deterministic pseudo-random sample of the strategy space.  That keeps
+the suite collectable and the properties exercised everywhere without
+adding a hard dependency (see requirements-dev.txt for the real one).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: rng.choice(pool))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def wrap(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return wrap
+
+
+def given(*strats: _Strategy):
+    def wrap(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_fallback_max_examples", None) or getattr(
+                fn, "_fallback_max_examples", _DEFAULT_EXAMPLES
+            )
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                fn(*args, *[s.example(rng) for s in strats], **kwargs)
+
+        # Hide the strategy-filled trailing parameters from pytest, which
+        # would otherwise look for fixtures with those names.
+        params = list(inspect.signature(fn).parameters.values())
+        run.__signature__ = inspect.Signature(params[: len(params) - len(strats)])
+        del run.__wrapped__
+        return run
+
+    return wrap

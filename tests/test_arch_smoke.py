@@ -10,6 +10,9 @@ import pytest
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.steps import init_train_state, make_train_step
 from repro.models import decode_step, forward, init_cache, init_model, loss_fn
+#: system-scale tests — excluded from the default (tier-1) run via
+#: `-m "not slow"`; run them with `pytest -m slow` or `-m ""`.
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 

@@ -1,0 +1,205 @@
+"""Equivalence tests: batched cost model vs the scalar reference oracle.
+
+`batched_plan_cost` / `batched_soft_plan_cost` / `batched_build_stages` /
+`batched_provision` must agree with the scalar `plan_cost` /
+`soft_plan_cost` / `build_stages` / `provision` on cost, feasibility, and
+the chosen provisioning — over randomized plans, fleets, and jobs,
+including infeasible and resource-limit edge cases.  The batched path is
+written to follow the scalar operation sequence per plan, so agreement is
+expected to be exact, but the assertions allow a relative 1e-9 to stay
+robust to benign reduction-order changes.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SchedulingPlan,
+    TrainingJob,
+    batched_plan_cost,
+    batched_soft_plan_cost,
+    build_stages,
+    default_fleet,
+    make_fleet,
+    paper_model_profiles,
+    plan_cost,
+    soft_plan_cost,
+)
+from repro.core.plan import batched_build_stages
+from repro.core.schedulers.base import CostCache
+
+JOB = TrainingJob()
+
+
+def _random_plans(rng, n, L, T):
+    A = rng.integers(0, T, (n, L))
+    A[: min(T, n)] = np.arange(min(T, n))[:, None]      # homogeneous anchors
+    if n > T + 1:
+        A[T] = np.arange(L) % T                          # max-fragmentation plan
+    return A
+
+
+def _assert_close(a, b, what):
+    if math.isinf(a) or math.isinf(b):
+        assert a == b, f"{what}: {a} != {b}"
+    else:
+        assert a == pytest.approx(b, rel=1e-9), f"{what}: {a} != {b}"
+
+
+def _check_equivalence(profiles, fleet, job, A):
+    bc, soft = batched_soft_plan_cost(A, profiles, fleet, job)
+    bc2 = batched_plan_cost(A, profiles, fleet, job)
+    np.testing.assert_array_equal(bc.costs, bc2.costs)
+    for i, row in enumerate(A):
+        plan = SchedulingPlan(tuple(int(x) for x in row))
+        cost, prov = plan_cost(plan, profiles, fleet, job)
+        s = soft_plan_cost(plan, profiles, fleet, job)
+        _assert_close(cost, float(bc.costs[i]), f"cost[{i}]")
+        _assert_close(s, float(soft[i]), f"soft[{i}]")
+        assert math.isfinite(cost) == bool(bc.feasible[i]), f"feasible[{i}]"
+        bprov = bc.prov(i)
+        if prov is None:
+            assert bprov is None, f"prov[{i}]: scalar None, batched {bprov}"
+        else:
+            assert bprov is not None, f"prov[{i}]: batched None, scalar {prov}"
+            assert prov.k == bprov.k, f"k[{i}]: {prov.k} != {bprov.k}"
+            assert prov.ps_cores == bprov.ps_cores, f"ps[{i}]"
+
+
+class TestStageBatchEquivalence:
+    @pytest.mark.parametrize("model", ["CTRDNN", "MATCHNET", "2EMB", "NCE"])
+    def test_matches_build_stages(self, model):
+        fleet = make_fleet(3)
+        profiles = paper_model_profiles(model, fleet)
+        rng = np.random.default_rng(7)
+        A = _random_plans(rng, 24, len(profiles), len(fleet))
+        sb = batched_build_stages(A, profiles, fleet)
+        for i, row in enumerate(A):
+            stages = build_stages(
+                SchedulingPlan(tuple(int(x) for x in row)), profiles, fleet
+            )
+            n = int(sb.num_stages[i])
+            assert n == len(stages)
+            assert not sb.mask[i, n:].any()
+            for s in stages:
+                j = s.index
+                assert sb.rtype[i, j] == s.resource_type
+                assert sb.oct[i, j] == s.oct
+                assert sb.odt[i, j] == s.odt
+                assert sb.alpha[i, j] == pytest.approx(s.alpha, rel=1e-12)
+                assert sb.beta[i, j] == pytest.approx(s.beta, rel=1e-12)
+
+    def test_rejects_bad_shapes(self):
+        fleet = default_fleet()
+        profiles = paper_model_profiles("NCE", fleet)
+        with pytest.raises(ValueError):
+            batched_build_stages(np.zeros(5, dtype=int), profiles, fleet)
+        with pytest.raises(ValueError):
+            batched_build_stages(np.zeros((2, 3), dtype=int), profiles, fleet)
+
+
+class TestBatchedCostEquivalence:
+    @pytest.mark.parametrize(
+        "model,num_types", [("CTRDNN", 2), ("MATCHNET", 2), ("2EMB", 3), ("NCE", 4)]
+    )
+    def test_randomized_plans(self, model, num_types):
+        fleet = default_fleet() if num_types == 2 else make_fleet(num_types)
+        profiles = paper_model_profiles(model, fleet)
+        rng = np.random.default_rng(hash((model, num_types)) % 2**32)
+        A = _random_plans(rng, 32, len(profiles), num_types)
+        _check_equivalence(profiles, fleet, JOB, A)
+
+    def test_mostly_infeasible_job(self):
+        """A throughput limit near the fleet ceiling exercises the graded
+        surrogate (relaxed re-provision) on most plans."""
+        fleet = default_fleet()
+        profiles = paper_model_profiles("CTRDNN", fleet)
+        job = dataclasses.replace(JOB, throughput_limit=2_000_000.0)
+        rng = np.random.default_rng(11)
+        A = _random_plans(rng, 24, len(profiles), len(fleet))
+        _check_equivalence(profiles, fleet, job, A)
+
+    def test_easy_job_all_feasible_path(self):
+        fleet = default_fleet()
+        profiles = paper_model_profiles("2EMB", fleet)
+        job = dataclasses.replace(JOB, throughput_limit=5_000.0)
+        rng = np.random.default_rng(13)
+        A = _random_plans(rng, 24, len(profiles), len(fleet))
+        _check_equivalence(profiles, fleet, job, A)
+
+    def test_resource_limit_edge(self):
+        """Per-type limits small enough that integer rounding decides
+        feasibility (Formula 10 boundary)."""
+        fleet = [
+            dataclasses.replace(r, max_count=max(2, r.max_count // 80))
+            for r in default_fleet()
+        ]
+        profiles = paper_model_profiles("NCE", fleet)
+        for limit in (5_000.0, 50_000.0, 200_000.0):
+            job = dataclasses.replace(JOB, throughput_limit=limit)
+            rng = np.random.default_rng(int(limit))
+            A = _random_plans(rng, 16, len(profiles), len(fleet))
+            _check_equivalence(profiles, fleet, job, A)
+
+    def test_varied_batch_sizes(self):
+        fleet = default_fleet()
+        profiles = paper_model_profiles("NCE", fleet)
+        rng = np.random.default_rng(17)
+        A = _random_plans(rng, 12, len(profiles), len(fleet))
+        for bs in (256, 4096, 65536):
+            job = dataclasses.replace(JOB, batch_size=bs)
+            _check_equivalence(profiles, fleet, job, A)
+
+    def test_single_plan_batch(self):
+        fleet = default_fleet()
+        profiles = paper_model_profiles("CTRDNN", fleet)
+        A = np.array([[0] + [1] * (len(profiles) - 1)])
+        _check_equivalence(profiles, fleet, JOB, A)
+
+
+class TestCostCacheBatching:
+    def setup_method(self):
+        self.fleet = default_fleet()
+        self.profiles = paper_model_profiles("2EMB", self.fleet)
+
+    def test_dedup_counts_one_eval_per_novel_plan(self):
+        cache = CostCache(self.profiles, self.fleet, JOB)
+        L = len(self.profiles)
+        a, b = (0,) * L, (1,) * L
+        costs = cache.batch_call([a, b, a, b, a])
+        assert cache.evaluations == 2
+        assert costs.shape == (5,)
+        assert costs[0] == costs[2] == costs[4]
+        cache.batch_call([a, b])  # fully cached: no new evaluations
+        assert cache.evaluations == 2
+
+    def test_soft_shares_true_cost_evaluation(self):
+        cache = CostCache(self.profiles, self.fleet, JOB)
+        L = len(self.profiles)
+        plans = [(i % 2,) * L for i in range(2)] + [
+            tuple((i + j) % 2 for j in range(L)) for i in range(2)
+        ]
+        soft = cache.batch_soft(plans)
+        n = cache.evaluations
+        # soft scoring also populated the true-cost cache: no re-evaluation
+        cache.batch_call(plans)
+        assert cache.evaluations == n
+        for p, s in zip(plans, soft):
+            true = cache(p)
+            if math.isfinite(true):
+                assert s == true
+            else:
+                assert math.isfinite(s)  # graded surrogate stays finite
+
+    def test_scalar_and_batch_entry_points_agree(self):
+        cache1 = CostCache(self.profiles, self.fleet, JOB)
+        cache2 = CostCache(self.profiles, self.fleet, JOB)
+        L = len(self.profiles)
+        rng = np.random.default_rng(3)
+        A = rng.integers(0, 2, (8, L))
+        batch = cache1.batch_soft(A)
+        single = np.array([cache2.soft(row) for row in A])
+        np.testing.assert_array_equal(batch, single)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no hard dep: deterministic fallback shim
+    from _hypothesis_fallback import given, settings, st
+
 
 from repro.nn import attention as attn_mod
 from repro.nn import mamba as mamba_mod

@@ -16,9 +16,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.parallel.pipeline import (
     make_stage_mesh, pipeline_apply, stack_stage_params,
 )
+
+#: system-scale tests — excluded from the default (tier-1) run via
+#: `-m "not slow"`; run them with `pytest -m slow` or `-m ""`.
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 

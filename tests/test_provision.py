@@ -3,7 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no hard dep: deterministic fallback shim
+    from _hypothesis_fallback import given, settings, st
+
 
 from repro.core import (
     SchedulingPlan, TrainingJob, build_stages, default_fleet,

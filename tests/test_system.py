@@ -14,6 +14,9 @@ from repro.core import TrainingJob, build_stages, default_fleet, make_fleet
 from repro.core.schedulers import HeuristicScheduler, RLScheduler
 from repro.launch.train import train
 from repro.models.profile import profile_arch
+#: system-scale tests — excluded from the default (tier-1) run via
+#: `-m "not slow"`; run them with `pytest -m slow` or `-m ""`.
+pytestmark = pytest.mark.slow
 
 
 class TestEndToEndTraining:
