@@ -21,6 +21,7 @@ SUITES = [
     ("fig12", "benchmarks.bench_fig12_pipeline"),
     ("roofline", "benchmarks.bench_roofline"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("ps", "benchmarks.bench_ps"),
 ]
 
 

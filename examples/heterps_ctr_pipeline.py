@@ -1,18 +1,22 @@
 """End-to-end HeterPS driver: CTR model with the full distributed stack.
 
 This is the paper's own workload (§6): a CTR model with a huge sparse
-embedding (PS-style sparse pull/push) feeding a dense tower, trained on
-a streaming synthetic click log with:
+embedding feeding a dense tower, trained on a streaming synthetic click
+log with:
 
 * RL-LSTM scheduling of the layer→resource-type plan (and the plan's
   stage partition driving the pipeline split),
-* parameter-server sparse embedding updates (only touched rows move),
+* a **sharded parameter server** (``repro.ps``) holding the embedding
+  table across 4 PS shards — the async ``PSClient`` double-buffers
+  pulls/pushes around the compute (while step *i* computes, batch
+  *i+1*'s rows are pulled and step *i−1*'s row grads pushed),
 * GPipe-style pipeline parallelism over the dense-tower stages
   (shard_map + ppermute; with one CPU device the stage mesh is 1-wide —
   run with XLA_FLAGS=--xla_force_host_platform_device_count=4 to see the
   real 4-stage pipeline),
-* the data-management access monitor deciding hot/warm/cold row tiers,
-* prefetching input pipeline.
+* the data-management access monitor deciding hot/warm/cold row tiers
+  and the ``TierPlacer`` re-pinning them every 50 steps,
+* prefetching input pipeline, per-shard pull/push telemetry.
 
 Trains ~65M parameters for a few hundred steps; logloss decreases.
 
@@ -20,6 +24,7 @@ Run:  PYTHONPATH=src python examples/heterps_ctr_pipeline.py [--steps 300]
 """
 
 import argparse
+import itertools
 import sys
 import time
 
@@ -35,7 +40,9 @@ from repro.data import AccessMonitor, PrefetchLoader
 from repro.parallel.pipeline import (
     make_stage_mesh, pipeline_loss, stack_stage_params,
 )
-from repro.parallel.ps import sparse_pull
+from repro.ps import (
+    CTRConfig, PSClient, PSTelemetry, ShardedTable, TierPlacer, click_stream,
+)
 
 VOCAB = 2_000_000
 EMB_DIM = 32
@@ -45,20 +52,13 @@ N_STAGES = 4
 LAYERS_PER_STAGE = 2
 MICRO = 8
 MB = 32               # examples per microbatch
+PS_SHARDS = 4
+REPIN_EVERY = 50
 
-
-def click_stream(seed: int):
-    """Synthetic CTR log: sparse ids + a planted logistic structure."""
-    rng = np.random.default_rng(seed)
-    w_true = rng.standard_normal(SLOTS) * 0.7
-    step = 0
-    while True:
-        # zipf-ish ids: hot head, long tail (drives the tier monitor)
-        ids = (rng.pareto(1.2, (MICRO * MB, SLOTS)) * 1000).astype(np.int64) % VOCAB
-        sig = (np.sin(ids % 97) * w_true).sum(-1)
-        y = (sig + rng.standard_normal(MICRO * MB) * 0.5 > 0).astype(np.float32)
-        yield {"ids": ids.astype(np.int32), "label": y}
-        step += 1
+#: the shared synthetic click log (zipf-ish ids, planted logistic
+#: structure) at this example's pipeline batch geometry
+STREAM_CFG = CTRConfig(vocab=VOCAB, emb_dim=EMB_DIM, slots=SLOTS,
+                       batch=MICRO * MB, seed=0)
 
 
 def main() -> None:
@@ -76,10 +76,12 @@ def main() -> None:
           f"cost {res.cost:.2f} USD, provisioning k={res.prov.k} "
           f"(embedding stage on {fleet[res.plan.assignment[0]].name})")
 
-    # --- 2. build the model: PS embedding + pipelined dense tower ------
+    # --- 2. build the model: sharded-PS embedding + pipelined tower ----
     key = jax.random.PRNGKey(0)
-    table = jax.random.normal(key, (VOCAB, EMB_DIM)) * 0.05
     monitor = AccessMonitor(VOCAB)
+    table = ShardedTable(VOCAB, EMB_DIM, PS_SHARDS, key, init_scale=0.05,
+                         monitor=monitor, telemetry=PSTelemetry(PS_SHARDS))
+    placer = TierPlacer(table, monitor, interval=REPIN_EVERY)
 
     d_in = SLOTS * EMB_DIM
     keys = jax.random.split(key, N_STAGES * LAYERS_PER_STAGE + 3)
@@ -104,7 +106,8 @@ def main() -> None:
         for x in jax.tree.leaves((stage_params, head_w, in_proj))
     )
     print(f"model: {n_params/1e6:.1f}M params, {N_STAGES}-stage pipeline "
-          f"({mesh.shape['stage']} pipeline devices), {MICRO} microbatches")
+          f"({mesh.shape['stage']} pipeline devices), {MICRO} microbatches, "
+          f"embedding on {PS_SHARDS} PS shards")
 
     def stage_fn(p, x):
         h = x
@@ -116,8 +119,9 @@ def main() -> None:
         return jnp.mean(jnp.maximum(logit, 0) - logit * y
                         + jnp.log1p(jnp.exp(-jnp.abs(logit))))
 
-    def loss_fn(table, ip, sp, hw, ids, labels):
-        emb = sparse_pull(table, ids)                       # PS pull
+    def loss_fn(emb, ip, sp, hw, labels):
+        # emb enters as the *pulled* PS activation; its gradient is
+        # exactly the per-row push payload
         x = emb.reshape(MICRO, MB, d_in) @ ip               # (M, mb, TOWER_D)
 
         def head_loss(h, y):
@@ -128,38 +132,52 @@ def main() -> None:
 
     grad_fn = jax.jit(jax.value_and_grad(loss_fn, argnums=(0, 1, 2, 3)))
 
-    # --- 3. train with prefetch + sparse PS push ------------------------
-    loader = PrefetchLoader(click_stream(0), depth=2)
+    # --- 3. train with prefetch + async sharded-PS pull/push -----------
+    loader = PrefetchLoader(
+        itertools.islice(click_stream(STREAM_CFG), args.steps), depth=2)
+    client = PSClient(table, loader, ids_key="ids", depth=2)
     lr = args.lr
     t0 = time.time()
     first = last = None
-    for step in range(args.steps):
-        b = next(loader)
-        monitor.record(b["ids"])
-        ids = jnp.asarray(b["ids"])
-        labels = jnp.asarray(b["label"])
-        loss, (g_table, g_ip, g_sp, g_hw) = grad_fn(
-            table, in_proj, stage_params, head_w, ids, labels
-        )
-        # PS push: g_table is a scatter-add of touched rows only; sparse
-        # rows get a higher learning rate (few updates per row)
-        table = table - 10.0 * lr * g_table
-        in_proj = in_proj - lr * g_ip
-        stage_params = jax.tree.map(lambda p, g: p - lr * g, stage_params, g_sp)
-        head_w = head_w - lr * g_hw
-        last = float(loss)
-        first = first if first is not None else last
-        if step % 50 == 0 or step == args.steps - 1:
-            print(f"step {step:4d} logloss {last:.4f} "
-                  f"({(time.time()-t0)/(step+1):.3f}s/step)", flush=True)
-    loader.close()
+    try:
+        for step, (b, emb) in enumerate(client):
+            labels = jnp.asarray(b["label"])
+            loss, (g_emb, g_ip, g_sp, g_hw) = grad_fn(
+                emb, in_proj, stage_params, head_w, labels
+            )
+            # PS push (async): only touched rows move; sparse rows get a
+            # higher learning rate (few updates per row)
+            client.push(b["ids"], g_emb, lr=10.0 * lr)
+            in_proj = in_proj - lr * g_ip
+            stage_params = jax.tree.map(lambda p, g: p - lr * g,
+                                        stage_params, g_sp)
+            head_w = head_w - lr * g_hw
+            placer.step(step)
+            last = float(loss)
+            first = first if first is not None else last
+            if step % 50 == 0 or step == args.steps - 1:
+                print(f"step {step:4d} logloss {last:.4f} "
+                      f"({(time.time()-t0)/(step+1):.3f}s/step)", flush=True)
+    finally:
+        client.close()
+        loader.close()
 
     stats = monitor.stats()
     print(f"\nlogloss {first:.4f} → {last:.4f} "
           f"({'decreased' if last < first else 'did not decrease'})")
     print(f"tier monitor: {stats['device_rows']} hot rows → HBM, "
           f"{stats['host_rows']} warm → host, {stats['disk_rows']} cold → SSD "
-          f"(of {VOCAB:,})")
+          f"(of {VOCAB:,}; {placer.repins} re-pins)")
+    tel = table.telemetry.totals()
+    print(f"PS traffic: pulled {tel['pull']['bytes']/1e6:.1f} MB "
+          f"@ {tel['pull']['bandwidth']/1e6:.1f} MB/s, pushed "
+          f"{tel['push']['bytes']/1e6:.1f} MB "
+          f"@ {tel['push']['bandwidth']/1e6:.1f} MB/s "
+          f"(hot-tier pull fraction {tel['pull']['hot_fraction']:.0%})")
+    for r in table.telemetry.shard_report():
+        print(f"  shard {r['shard']}: pull {r['pull_rows']} rows "
+              f"{r['pull_bytes']/1e6:.1f} MB, push {r['push_rows']} rows "
+              f"{r['push_bytes']/1e6:.1f} MB")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import threading
 
 import numpy as np
 
@@ -39,32 +40,63 @@ class TierThresholds:
 
 class AccessMonitor:
     """Counts row-level accesses of a (sharded) embedding table and
-    assigns storage tiers by access mass."""
+    assigns storage tiers by access mass.
+
+    Thread-safe: the PS client records accesses from its puller thread
+    while the tier placer reads/ages the counts on the main thread, and
+    numpy releases the GIL on large-array ops — a lock keeps the counts
+    coherent.
+    """
 
     def __init__(self, num_rows: int, thresholds: TierThresholds | None = None):
         self.counts = np.zeros((num_rows,), np.float64)
         self.thresholds = thresholds or TierThresholds()
+        self._lock = threading.Lock()
 
     def record(self, row_ids: np.ndarray) -> None:
         ids, cnt = np.unique(np.asarray(row_ids).ravel(), return_counts=True)
-        self.counts[ids] += cnt
+        if ids.size == 0:
+            return
+        # `ids` is sorted, so the extremes are the range check.  A silent
+        # wrap/clip here would credit the wrong rows and skew placement.
+        num_rows = self.counts.shape[0]
+        if ids[0] < 0 or ids[-1] >= num_rows:
+            raise ValueError(
+                f"row ids out of range: got ids in [{ids[0]}, {ids[-1]}] for "
+                f"a table with {num_rows} rows (expected 0 <= id < {num_rows})"
+            )
+        with self._lock:
+            self.counts[ids] += cnt
 
     def age(self) -> None:
-        self.counts *= self.thresholds.ema
+        with self._lock:
+            self.counts *= self.thresholds.ema
 
-    def placement(self) -> np.ndarray:
+    def snapshot_counts(self) -> np.ndarray:
+        """Locked copy of the access counts — hand it to :meth:`placement`
+        so a decision and any count-ordered post-processing (e.g. the tier
+        placer's hottest-first cache fill) see the same state."""
+        with self._lock:
+            return self.counts.copy()
+
+    def placement(self, counts: np.ndarray | None = None) -> np.ndarray:
         """Tier per row (np array of Tier) — hot rows by cumulative access
-        mass, ties broken toward DEVICE."""
+        mass, ties broken toward DEVICE.  ``counts`` defaults to a fresh
+        :meth:`snapshot_counts`."""
         t = self.thresholds
-        order = np.argsort(-self.counts, kind="stable")
-        mass = np.cumsum(self.counts[order])
+        if self.counts.size == 0:
+            return np.empty((0,), dtype=object)
+        if counts is None:
+            counts = self.snapshot_counts()
+        order = np.argsort(-counts, kind="stable")
+        mass = np.cumsum(counts[order])
         total = mass[-1] if mass[-1] > 0 else 1.0
         # classify by cumulative mass *before* the row: a row starts hot if
         # the hot budget isn't already filled when we reach it (so the
         # single hottest row is always DEVICE).
-        frac_before = (mass - self.counts[order]) / total
-        tiers = np.full(self.counts.shape, Tier.DISK, dtype=object)
-        accessed = self.counts[order] > 0
+        frac_before = (mass - counts[order]) / total
+        tiers = np.full(counts.shape, Tier.DISK, dtype=object)
+        accessed = counts[order] > 0
         hot = order[(frac_before < t.hot_fraction) & accessed]
         warm = order[(frac_before >= t.hot_fraction)
                      & (frac_before < t.warm_fraction) & accessed]

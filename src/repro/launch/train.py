@@ -7,6 +7,13 @@ via ``dryrun.py``.
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \\
       --reduced --steps 100 --batch 8 --seq 128
+
+``--sparse-ps`` switches to the sparse path: the reduced CTR workload
+trained over the sharded parameter server (``repro.ps``), with async
+double-buffered pull/push overlap and tier-aware row placement:
+
+  PYTHONPATH=src python -m repro.launch.train --sparse-ps \\
+      --steps 200 --ps-shards 4
 """
 
 from __future__ import annotations
@@ -66,22 +73,62 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
     }
 
 
+def train_sparse_ps(*, steps: int, batch: int | None = None,
+                    lr: float | None = None, num_shards: int = 4,
+                    sync: bool = False, partition: str = "mod",
+                    repin_interval: int = 50, log_every: int = 10) -> dict:
+    """The ``--sparse-ps`` path: reduced CTR model over the sharded PS
+    (``repro.ps``) — async double-buffered pull/push unless ``sync``.
+    ``batch``/``lr`` default to the CTR workload's own values."""
+    import dataclasses
+
+    from repro.ps import CTRConfig, train_ctr_ps
+
+    cfg = CTRConfig()
+    overrides = {k: v for k, v in (("batch", batch), ("lr", lr))
+                 if v is not None}
+    cfg = dataclasses.replace(cfg, **overrides)
+    return train_ctr_ps(cfg, steps=steps, num_shards=num_shards,
+                        mode="sync" if sync else "async",
+                        partition=partition, repin_interval=repin_interval,
+                        log_every=log_every)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--batch", type=int, default=8)
+    # batch/lr defaults depend on the path (dense: 8 / 3e-4; sparse-ps:
+    # the CTR workload's 256 / 0.05), so resolve after parsing
+    ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--microbatch", type=int, default=None)
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--sparse-ps", action="store_true",
+                    help="train the reduced CTR workload over the sharded "
+                         "parameter server instead of a dense arch")
+    ap.add_argument("--ps-shards", type=int, default=4)
+    ap.add_argument("--ps-sync", action="store_true",
+                    help="synchronous pull→compute→push (no overlap)")
+    ap.add_argument("--ps-partition", choices=("mod", "block"), default="mod")
     args = ap.parse_args()
-    summary = train(args.arch, reduced=args.reduced, steps=args.steps,
-                    batch=args.batch, seq=args.seq, lr=args.lr,
-                    microbatch=args.microbatch,
-                    checkpoint_dir=args.checkpoint_dir)
+    if args.sparse_ps:
+        summary = train_sparse_ps(
+            steps=args.steps, batch=args.batch, lr=args.lr,
+            num_shards=args.ps_shards, sync=args.ps_sync,
+            partition=args.ps_partition)
+        summary.pop("step_times", None)
+        summary.pop("step_ts", None)
+    else:
+        summary = train(args.arch, reduced=args.reduced, steps=args.steps,
+                        batch=args.batch if args.batch is not None else 8,
+                        seq=args.seq,
+                        lr=args.lr if args.lr is not None else 3e-4,
+                        microbatch=args.microbatch,
+                        checkpoint_dir=args.checkpoint_dir)
     print(json.dumps(summary, indent=2))
 
 

@@ -16,11 +16,9 @@ row-frequency hook for the data-management tier monitor.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def sparse_pull(table, ids):
@@ -46,6 +44,21 @@ def segment_rowsum(ids, row_grads, *, num_rows: int):
     )
 
 
+def dedup_rows(ids, row_grads, *, fill_id: int):
+    """Reduce an (ids, row_grads) COO stream to one entry per distinct id.
+
+    jit-compatible (fixed output size: padding slots get id ``fill_id``
+    and zero rows — push them with ``mode="drop"``).  Returns sorted
+    unique ids ``(N,)`` and per-id summed rows ``(N, D)``; duplicates are
+    accumulated in stream order via :func:`segment_rowsum`, so a push of
+    the result is bit-identical to a dense-table segment sum.
+    """
+    ids = ids.reshape(-1)
+    uids, inv = jnp.unique(ids, return_inverse=True, size=ids.size,
+                           fill_value=fill_id)
+    return uids, segment_rowsum(inv.reshape(-1), row_grads, num_rows=ids.size)
+
+
 class SparseEmbedding:
     """Vocab-sharded embedding with PS-style sparse update + access stats."""
 
@@ -57,13 +70,24 @@ class SparseEmbedding:
 
     def lookup(self, ids):
         if self.monitor is not None:
-            import numpy as np
-
             self.monitor.record(np.asarray(ids))
         return sparse_pull(self.table, ids)
 
-    def apply_sparse_grads(self, ids, row_grads, *, lr: float):
+    def apply_sparse_grads(self, ids, row_grads, *, lr: float,
+                           dedup: bool = True):
+        """Push row gradients.  With ``dedup`` (default) duplicate ids are
+        aggregated once via :func:`dedup_rows` before the scatter, so an
+        adaptive optimizer sitting on the PS sees each row exactly once
+        per step.  ``dedup=False`` keeps the raw scatter-add of every
+        occurrence — for plain SGD the two are an equal row sum (the
+        SGD-sum equivalence), and tests pin that.
+        """
         ids_flat = ids.reshape(-1)
         g_flat = row_grads.reshape(-1, self.dim)
-        self.table = sparse_push(self.table, ids_flat, g_flat, lr=lr)
+        if dedup:
+            uids, summed = dedup_rows(ids_flat, g_flat, fill_id=self.vocab)
+            self.table = self.table.at[uids].add(
+                (-lr * summed).astype(self.table.dtype), mode="drop")
+        else:
+            self.table = sparse_push(self.table, ids_flat, g_flat, lr=lr)
         return self.table

@@ -1,0 +1,28 @@
+"""Sharded parameter-server subsystem (HeterPS §3).
+
+``ShardedTable`` vocab-partitions sparse embedding tables across PS
+shards with jit-compatible routed pull/push; ``PSClient`` overlaps the
+pulls/pushes with compute (double-buffered); ``TierPlacer`` re-pins hot
+rows from the access monitor's decisions; ``PSTelemetry`` meters
+per-shard traffic and feeds it back to the cost model.
+"""
+
+from repro.ps.client import PSClient
+from repro.ps.placement import TierPlacer
+from repro.ps.sharding import (
+    RoutingSpec, ShardedTable, sharded_pull, sharded_update,
+    TIER_DEVICE, TIER_HOST, TIER_DISK,
+)
+from repro.ps.telemetry import PSTelemetry, ShardCounters
+from repro.ps.workload import (
+    CTRConfig, click_stream, init_tower, make_step_fn, make_table,
+    train_ctr_ps,
+)
+
+__all__ = [
+    "PSClient", "TierPlacer", "RoutingSpec", "ShardedTable",
+    "sharded_pull", "sharded_update", "TIER_DEVICE", "TIER_HOST",
+    "TIER_DISK", "PSTelemetry", "ShardCounters", "CTRConfig",
+    "click_stream", "init_tower", "make_step_fn", "make_table",
+    "train_ctr_ps",
+]

@@ -1,0 +1,198 @@
+"""Async PS client — overlap pull/push with compute (HeterPS §3).
+
+The paper's workers hide the worker↔PS network hop behind compute: while
+step *i* computes, the rows batch *i+1* needs are already being pulled
+and the gradients of step *i−1* are being pushed.  :class:`PSClient`
+implements that as a double-buffered iterator over a batch stream
+(typically a :class:`~repro.data.pipeline.PrefetchLoader`):
+
+* a **puller** thread walks the stream, pulls each batch's rows from the
+  :class:`~repro.ps.sharding.ShardedTable`, and stages ``(batch, rows)``
+  pairs in a bounded queue (``depth`` = number of in-flight pulls);
+* a **pusher** thread drains a push queue of ``(ids, grads)`` and applies
+  them to the table;
+* the main thread iterates ``(batch, rows)`` and calls :meth:`push` —
+  both calls are non-blocking in steady state, so step time approaches
+  ``max(compute, pull, push)`` instead of their sum.
+
+Consistency: updates are applied in push order, but a pull staged while
+pushes are in flight may read pre-push rows — bounded staleness of at
+most ``depth`` steps, the standard async-PS trade (HeterPS trains CTR
+models asynchronously for exactly this reason).  Shard arrays are
+immutable jax values swapped atomically, so readers never see torn rows.
+Shutdown follows ``PrefetchLoader``'s contract: timed puts + a sentinel,
+so neither side can hang.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+#: stream-end marker (same pattern as data.pipeline's sentinel)
+_STOP = object()
+
+
+class PSClient:
+    """Double-buffered async pull/push over a :class:`ShardedTable`.
+
+    Iterating yields ``(batch, rows)`` where ``rows = table.pull(
+    batch[ids_key])`` was issued one step ahead; :meth:`push` enqueues a
+    gradient push applied in the background.  Call :meth:`close` when
+    done (drains queued pushes by default).
+    """
+
+    def __init__(self, table, loader, *, ids_key: str = "ids",
+                 depth: int = 2, put_timeout: float = 0.05):
+        self.table = table
+        self._ids_key = ids_key
+        self._put_timeout = put_timeout
+        self._pull_q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._push_q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._done = False
+        self._closed = False
+        self._lock = threading.Lock()
+        self.steps_pulled = 0
+        self.steps_pushed = 0
+        self._pushes_enqueued = 0
+        self._pusher_error: BaseException | None = None
+        self._puller_error: BaseException | None = None
+
+        def puller():
+            try:
+                for batch in loader:
+                    rows = self.table.pull(batch[self._ids_key])
+                    with self._lock:
+                        self.steps_pulled += 1
+                    placed = False
+                    while not self._stop.is_set():
+                        try:
+                            self._pull_q.put((batch, rows),
+                                             timeout=self._put_timeout)
+                            placed = True
+                            break
+                        except queue.Full:
+                            continue
+                    if not placed:
+                        return  # close() requested while queue stayed full
+            except BaseException as e:  # surfaced by __next__ at stream end
+                self._puller_error = e
+            finally:
+                # always terminate the stream; make room by dropping staged
+                # pulls once close() was requested (the consumer is gone)
+                wait = self._put_timeout
+                while True:
+                    try:
+                        self._pull_q.put(_STOP, timeout=wait)
+                        return
+                    except queue.Full:
+                        if self._stop.is_set():
+                            try:
+                                self._pull_q.get_nowait()
+                            except queue.Empty:
+                                pass
+                        else:
+                            wait = min(wait * 2, 1.0)
+
+        def pusher():
+            while True:
+                item = self._push_q.get()
+                if item is _STOP:
+                    return
+                ids, grads, lr, dedup = item
+                try:
+                    self.table.push(ids, grads, lr=lr, dedup=dedup)
+                except BaseException as e:  # surface in flush()/close()
+                    self._pusher_error = e
+                    return
+                with self._lock:
+                    self.steps_pushed += 1
+
+        self._puller = threading.Thread(target=puller, daemon=True)
+        self._pusher = threading.Thread(target=pusher, daemon=True)
+        self._puller.start()
+        self._pusher.start()
+
+    # --- pull side -------------------------------------------------------
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        item = self._pull_q.get()
+        if item is _STOP:
+            self._done = True
+            if self._puller_error is not None:
+                # a pull failed mid-stream — surface it rather than letting
+                # training end early looking like a clean (short) run
+                raise RuntimeError("PS pull failed") from self._puller_error
+            raise StopIteration
+        return item  # (batch, rows)
+
+    # --- push side -------------------------------------------------------
+    def push(self, ids, row_grads, *, lr: float, dedup: bool = True) -> None:
+        """Queue an async push of ``-lr * row_grads`` at ``ids``."""
+        if self._closed:
+            raise RuntimeError("push() after close()")
+        self._raise_pusher_error()
+        self._push_q.put((ids, row_grads, lr, dedup))
+        with self._lock:
+            self._pushes_enqueued += 1
+
+    def flush(self, timeout: float = 60.0) -> None:
+        """Block until every queued push has been applied to the table."""
+        deadline = time.monotonic() + timeout
+        while True:
+            self._raise_pusher_error()
+            with self._lock:
+                if self.steps_pushed >= self._pushes_enqueued:
+                    return
+            if not self._pusher.is_alive():
+                raise RuntimeError("pusher thread exited with pushes pending")
+            if time.monotonic() > deadline:
+                raise TimeoutError("PS push queue did not drain")
+            time.sleep(0.001)
+
+    def _raise_pusher_error(self):
+        if self._pusher_error is not None:
+            raise RuntimeError("PS push failed") from self._pusher_error
+
+    # --- lifecycle ---------------------------------------------------------
+    def close(self, *, drain: bool = True, timeout: float = 10.0) -> None:
+        """Stop both threads; with ``drain`` (default) queued pushes are
+        applied first so the table reflects every ``push()`` call."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            if drain and self._pusher_error is None:
+                self.flush(timeout=timeout)
+        finally:
+            # even if the drain raised, stop both threads — a failed close
+            # must not leave the puller/pusher running against the table
+            self._stop.set()
+            # wake the pusher; drop a stale (unapplied, drain=False) push
+            # to make room if the queue is full
+            while True:
+                try:
+                    self._push_q.put(_STOP, timeout=self._put_timeout)
+                    break
+                except queue.Full:
+                    try:
+                        self._push_q.get_nowait()
+                    except queue.Empty:
+                        pass
+            self._puller.join(timeout)
+            self._pusher.join(timeout)
+        # a pusher failure means queued gradients were dropped — surface it
+        # even when the training loop already issued its last push()
+        self._raise_pusher_error()
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"steps_pulled": self.steps_pulled,
+                    "steps_pushed": self.steps_pushed,
+                    "pushes_enqueued": self._pushes_enqueued}

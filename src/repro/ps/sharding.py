@@ -1,0 +1,410 @@
+"""Sharded parameter-server table — HeterPS §3's CPU-PS tier, scaled out.
+
+The paper keeps huge sparse embedding tables on CPU parameter servers and
+shards them across hosts; workers pull only the touched rows and push
+sparse row gradients back.  :class:`ShardedTable` vocab-partitions one
+logical ``(V, D)`` table across ``N`` PS shards:
+
+* storage is one ``(V, D)`` array in *shard-major* layout — shard ``s``'s
+  rows form the contiguous slab ``[offset_s, offset_s + rows_s)``.  On
+  real hardware that slab layout is exactly what a ``NamedSharding`` over
+  a PS mesh axis consumes (one slab per host); on the CPU container the
+  slabs are process-local.  Keeping one array makes routed ``pull`` a
+  single gather and routed ``push`` a single COO scatter-add — O(ids),
+  independent of the shard count;
+* pushes dedup duplicate ids via ``dedup_rows`` before the scatter so an
+  adaptive optimizer on the PS sees each row once per step;
+* tier-aware placement is *physical*: a fixed-capacity **hot-row cache**
+  (``hot_rows`` + an id→slot map) holds the rows the access monitor
+  marked DEVICE-tier.  Pulls serve hot ids from the cache and cold ids
+  from main storage; pushes write through to both, so the two stay
+  bit-identical.  On TPU runtimes the cache lives in HBM
+  (``memory_kind="device"``) while main storage is demoted to
+  ``pinned_host``; on CPU both are plain arrays and the per-shard
+  ``tiers`` codes simulate the storage tiers;
+* every pull/push is metered per shard (bytes, rows, wall time) by an
+  attached :class:`~repro.ps.telemetry.PSTelemetry`, and an optional
+  simulated RPC latency models the worker↔PS network hop the CPU
+  container doesn't have.
+
+Routing is bit-exact against the single-shard oracle
+(:class:`repro.parallel.ps.SparseEmbedding`): a row lives in exactly one
+slab slot, so its scatter contributions arrive in the same stream order
+as in the unsharded table (pinned by ``tests/test_ps.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.ps import dedup_rows
+
+#: tier codes stored in the per-shard placement arrays (int8); index-aligned
+#: with ``repro.data.cache.Tier`` ordering DEVICE < HOST < DISK.
+TIER_DEVICE, TIER_HOST, TIER_DISK = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingSpec:
+    """Static routing metadata — hashable, so jit can close over it.
+
+    ``partition="mod"`` (default) assigns row ``i`` to shard ``i % N`` —
+    balanced under the zipf-skewed id streams of CTR logs.  ``"block"``
+    assigns contiguous vocab ranges (shard ``s`` owns
+    ``[s*block, (s+1)*block)``) — the layout a range-partitioned
+    key-value PS would use.
+    """
+
+    vocab: int
+    dim: int
+    num_shards: int
+    partition: str = "mod"
+
+    def __post_init__(self):
+        if self.partition not in ("mod", "block"):
+            raise ValueError(f"unknown partition {self.partition!r}")
+        if not 1 <= self.num_shards <= max(1, self.vocab):
+            raise ValueError(
+                f"num_shards={self.num_shards} outside [1, vocab={self.vocab}]")
+
+    @property
+    def block(self) -> int:
+        return -(-self.vocab // self.num_shards)  # ceil
+
+    @property
+    def shard_rows(self) -> tuple[int, ...]:
+        if self.partition == "mod":
+            return tuple(
+                (self.vocab - s + self.num_shards - 1) // self.num_shards
+                for s in range(self.num_shards))
+        return tuple(
+            max(0, min(self.block, self.vocab - s * self.block))
+            for s in range(self.num_shards))
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        """Slab start of each shard in the shard-major storage layout."""
+        out, acc = [], 0
+        for r in self.shard_rows:
+            out.append(acc)
+            acc += r
+        return tuple(out)
+
+    def route(self, ids):
+        """ids → (owner shard, local row).  Works on jnp and np arrays."""
+        if self.partition == "mod":
+            return ids % self.num_shards, ids // self.num_shards
+        block = self.block
+        mod = jnp if isinstance(ids, jax.Array) else np
+        return mod.clip(ids // block, 0, self.num_shards - 1), ids % block
+
+    def flatten(self, ids):
+        """ids → slot in the shard-major ``(V, D)`` storage array."""
+        owner, local = self.route(ids)
+        if isinstance(ids, jax.Array):
+            return jnp.asarray(self.offsets, ids.dtype)[owner] + local
+        return np.asarray(self.offsets, dtype=np.asarray(ids).dtype)[
+            owner] + local
+
+    def global_rows(self, shard: int) -> np.ndarray:
+        """Global row ids owned by ``shard``, in local-row (slab) order."""
+        if self.partition == "mod":
+            return np.arange(shard, self.vocab, self.num_shards)
+        lo = shard * self.block
+        return np.arange(lo, lo + self.shard_rows[shard])
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def sharded_pull(data, hot_rows, slot_of, ids, *, spec: RoutingSpec):
+    """Routed pull: hot ids from the cache, cold ids from main storage.
+
+    ``data`` is the shard-major ``(V, D)`` storage; ``hot_rows``/
+    ``slot_of`` the placement cache (``slot_of[i] < 0`` → cold).  Values
+    are identical either way (write-through invariant), so the result is
+    bit-identical to a single-table gather regardless of placement.
+    """
+    cold = data[spec.flatten(ids)]
+    if hot_rows is None or hot_rows.shape[0] == 0:
+        return cold
+    slot = slot_of[ids]
+    hot = hot_rows[jnp.clip(slot, 0)]
+    return jnp.where((slot >= 0)[..., None], hot, cold)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "dedup"))
+def sharded_update(data, ids, row_grads, lr, *, spec: RoutingSpec,
+                   dedup: bool = True):
+    """Routed push into main storage: one COO scatter-add of
+    ``-lr * row_grads`` at the ids' storage slots.
+
+    With ``dedup`` the (ids, grads) stream is first reduced to one summed
+    row per distinct id (``dedup_rows``); padding slots carry the id
+    ``spec.vocab`` and are mapped past the end of storage, so the scatter
+    drops them — no masked zero-adds, hence per-row accumulation order
+    (and bits) matches the single-table scatter exactly.  Returns
+    ``(new_data, pushed_ids, summed_updates)`` so the caller can apply
+    the same updates to the hot cache.
+    """
+    ids = ids.reshape(-1)
+    g = row_grads.reshape(-1, spec.dim)
+    if dedup:
+        ids, g = dedup_rows(ids, g, fill_id=spec.vocab)
+    u = (-lr * g).astype(data.dtype)
+    tgt = jnp.where(ids < spec.vocab, spec.flatten(ids), data.shape[0])
+    return data.at[tgt].add(u, mode="drop"), ids, u
+
+
+@jax.jit
+def _hot_apply(hot_rows, slot_of, ids, updates):
+    """Write-through: apply the already-summed push updates to the cached
+    copies of hot rows (cold / padding ids drop)."""
+    slot = slot_of[ids]
+    tgt = jnp.where(slot >= 0, slot, hot_rows.shape[0])
+    return hot_rows.at[tgt].add(updates, mode="drop")
+
+
+class ShardedTable:
+    """One logical embedding table, vocab-partitioned across N PS shards.
+
+    Parameters:
+      monitor: optional :class:`repro.data.cache.AccessMonitor` — every
+        pull records row-access counts (the data-management module's
+        input signal).
+      telemetry: optional :class:`repro.ps.telemetry.PSTelemetry` —
+        per-shard pull/push bytes + wall-time accounting.
+      hot_capacity: row capacity of the hot cache (0 disables it until a
+        :class:`~repro.ps.placement.TierPlacer` is attached anyway —
+        the cache only fills on re-pin).
+      rpc_latency_s: simulated per-op worker↔PS network latency (both
+        pull and push pay it).  0 on real deployments where the network
+        is physical; the overlap benchmark sets it to model the paper's
+        CPU-PS hop on a single-process container.
+
+    Thread-safety: the pusher and the placer both mutate state; a small
+    lock makes (storage, cache, slot-map) transitions atomic so a
+    concurrent pull always snapshots a coherent triple.
+    """
+
+    def __init__(self, vocab: int, dim: int, num_shards: int, key=None, *,
+                 partition: str = "mod", dtype=jnp.float32, monitor=None,
+                 telemetry=None, hot_capacity: int = 4096,
+                 rpc_latency_s: float = 0.0, init_scale: float | None = None):
+        self.spec = RoutingSpec(vocab, dim, num_shards, partition)
+        self.monitor = monitor
+        self.telemetry = telemetry
+        self.hot_capacity = int(hot_capacity)
+        self.rpc_latency_s = float(rpc_latency_s)
+        self._mu = threading.Lock()
+        self._data_version = 0   # bumped on every storage swap (push/demote)
+        if key is not None:
+            scale = dim**-0.5 if init_scale is None else init_scale
+            dense = jax.random.normal(key, (vocab, dim), dtype) * scale
+            self.data = self._to_slabs(dense)
+        else:
+            self.data = jnp.zeros((vocab, dim), dtype)
+        # hot-row cache: empty until the first re-pin
+        self.hot_rows = jnp.zeros((0, dim), dtype)
+        self.slot_of = jnp.full((vocab + 1,), -1, jnp.int32)
+        # simulated storage-tier placement (row granularity, per shard);
+        # everything starts cold, matching a freshly loaded table
+        self.tiers = [np.full((r,), TIER_DISK, np.int8)
+                      for r in self.spec.shard_rows]
+        # host copy of the slot map for O(ids) hot-hit accounting — counts
+        # rows actually served from the cache, not merely DEVICE-coded
+        self._slot_np = np.full((vocab + 1,), -1, np.int32)
+        self._cache_active = False
+
+    # --- construction / inspection ------------------------------------
+    def _to_slabs(self, dense):
+        """(V, D) vocab order → shard-major slab order."""
+        perm = np.concatenate([self.spec.global_rows(s)
+                               for s in range(self.spec.num_shards)])
+        return jnp.asarray(dense)[perm]
+
+    @classmethod
+    def from_dense(cls, table, num_shards: int, *, partition: str = "mod",
+                   **kw) -> "ShardedTable":
+        t = cls(table.shape[0], table.shape[1], num_shards,
+                partition=partition, dtype=table.dtype, **kw)
+        t.data = t._to_slabs(table)
+        return t
+
+    def to_dense(self):
+        """Reassemble the logical ``(V, D)`` table (tests/checkpointing)."""
+        perm = np.concatenate([self.spec.global_rows(s)
+                               for s in range(self.spec.num_shards)])
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.size)
+        return self.data[inv]
+
+    @property
+    def shards(self) -> list:
+        """Per-shard slab views of the storage array."""
+        return [self.data[o:o + r] for o, r in
+                zip(self.spec.offsets, self.spec.shard_rows)]
+
+    @property
+    def vocab(self) -> int:
+        return self.spec.vocab
+
+    @property
+    def dim(self) -> int:
+        return self.spec.dim
+
+    @property
+    def num_shards(self) -> int:
+        return self.spec.num_shards
+
+    # --- PS operations -------------------------------------------------
+    def _account(self, op: str, ids_np: np.ndarray, seconds: float,
+                 bytes_per_row: int) -> None:
+        if self.telemetry is None:
+            return
+        owner, local = self.spec.route(ids_np)
+        owner, local = owner.ravel(), local.ravel()
+        S = self.spec.num_shards
+        per_shard = np.bincount(owner, minlength=S)
+        hot = None
+        if self._cache_active:
+            hot = np.bincount(
+                owner[self._slot_np[ids_np.ravel()] >= 0], minlength=S)
+        self.telemetry.record(op, rows=per_shard,
+                              bytes_=per_shard * bytes_per_row,
+                              seconds=seconds, hot_rows=hot)
+
+    def _check_ids(self, ids_np: np.ndarray) -> None:
+        if ids_np.size and (ids_np.min() < 0 or ids_np.max() >= self.vocab):
+            raise ValueError(
+                f"ids out of range for vocab={self.vocab}: "
+                f"[{ids_np.min()}, {ids_np.max()}]")
+
+    def pull(self, ids):
+        """PS pull: fetch the touched rows.  ``ids (...,)`` → ``(..., D)``."""
+        t0 = time.perf_counter()
+        ids = jnp.asarray(ids)
+        ids_np = np.asarray(ids)
+        self._check_ids(ids_np)
+        if self.monitor is not None:
+            self.monitor.record(ids_np)
+        with self._mu:   # coherent (storage, cache, slot-map) snapshot
+            data, hot, slot = self.data, self.hot_rows, self.slot_of
+        out = sharded_pull(data, hot, slot, ids, spec=self.spec)
+        jax.block_until_ready(out)
+        if self.rpc_latency_s:
+            time.sleep(self.rpc_latency_s)
+        self._account("pull", ids_np, time.perf_counter() - t0,
+                      self.spec.dim * out.dtype.itemsize)
+        return out
+
+    def push(self, ids, row_grads, *, lr: float, dedup: bool = True):
+        """PS push: apply ``-lr * row_grads`` to the owning shards (and
+        write through to the hot cache, keeping the two bit-identical)."""
+        t0 = time.perf_counter()
+        ids = jnp.asarray(ids)
+        ids_np = np.asarray(ids)
+        self._check_ids(ids_np)
+        grads = jnp.asarray(row_grads)
+        while True:
+            with self._mu:
+                base, version = self.data, self._data_version
+            data_new, pushed_ids, updates = sharded_update(
+                base, ids, grads, lr, spec=self.spec, dedup=dedup)
+            jax.block_until_ready(data_new)
+            with self._mu:
+                if self._data_version != version:
+                    # storage was swapped under us (another push, or a
+                    # memory-kind demotion) — redo against the new array so
+                    # no update is lost; at most one retry in steady state
+                    continue
+                # the hot write-through must use the *current* cache/slot-
+                # map (a re-pin may have landed since the scatter started)
+                if self.hot_rows.shape[0]:
+                    self.hot_rows = jax.block_until_ready(_hot_apply(
+                        self.hot_rows, self.slot_of, pushed_ids, updates))
+                self.data = data_new
+                self._data_version += 1
+                break
+        if self.rpc_latency_s:
+            time.sleep(self.rpc_latency_s)
+        if self.telemetry is not None:
+            itemsize = self.data.dtype.itemsize
+            if dedup:
+                # the wire carries one summed row per distinct id — reuse
+                # the deduped ids the scatter produced (drop the padding)
+                wire_ids = np.asarray(pushed_ids)
+                wire_ids = wire_ids[wire_ids < self.vocab]
+            else:
+                wire_ids = ids_np
+            self._account("push", wire_ids, time.perf_counter() - t0,
+                          self.spec.dim * itemsize + ids_np.itemsize)
+        return self
+
+    # --- tier placement (written by TierPlacer) -------------------------
+    def set_tiers(self, global_tiers: np.ndarray) -> dict:
+        """Install a per-row tier assignment (array of
+        ``repro.data.cache.Tier`` over the *global* vocab) into the
+        per-shard tier arrays; returns per-tier row counts."""
+        from repro.data.cache import Tier
+
+        codes = np.full((self.vocab,), TIER_DISK, np.int8)
+        codes[global_tiers == Tier.DEVICE] = TIER_DEVICE
+        codes[global_tiers == Tier.HOST] = TIER_HOST
+        for s in range(self.num_shards):
+            self.tiers[s] = codes[self.spec.global_rows(s)]
+        return {
+            "device_rows": int((codes == TIER_DEVICE).sum()),
+            "host_rows": int((codes == TIER_HOST).sum()),
+            "disk_rows": int((codes == TIER_DISK).sum()),
+        }
+
+    def install_hot_rows(self, hot_ids: np.ndarray) -> int:
+        """Re-pin: load ``hot_ids`` (truncated to capacity) into the hot
+        cache and rebuild the slot map.  Returns the cached row count."""
+        hot_ids = np.asarray(hot_ids, np.int64).ravel()[:self.hot_capacity]
+        if hot_ids.size == 0:
+            return 0
+        slot = np.full((self.vocab + 1,), -1, np.int32)
+        slot[hot_ids] = np.arange(hot_ids.size, dtype=np.int32)
+        slot_j = jnp.asarray(slot)
+        # pad the cache to its fixed capacity so repins with different hot
+        # set sizes don't retrigger jit traces of the pull/push paths
+        pad = np.zeros((self.hot_capacity,), np.int64)
+        pad[:hot_ids.size] = hot_ids
+        flat = self.spec.flatten(jnp.asarray(pad))
+        with self._mu:
+            self.hot_rows = _to_memory_kind(self.data[flat], "device")
+            self.slot_of = slot_j
+            self._slot_np = slot
+            self._cache_active = True
+        return int(hot_ids.size)
+
+    def demote_storage(self) -> None:
+        """Best-effort: move main storage to host memory (TPU runtimes) —
+        the hot cache is the only HBM-resident copy after this."""
+        with self._mu:
+            self.data = _to_memory_kind(self.data, "pinned_host")
+            self._data_version += 1   # make any in-flight push retry
+
+    def tier_counts(self) -> np.ndarray:
+        """(num_shards, 3) rows per (DEVICE, HOST, DISK) tier per shard."""
+        return np.stack([np.bincount(t, minlength=3) for t in self.tiers])
+
+
+def _to_memory_kind(arr, kind: str):
+    """device_put with a memory kind on runtimes that support it (TPU);
+    identity elsewhere — the CPU container simulates tiers in software."""
+    dev = jax.devices()[0]
+    if dev.platform != "tpu":
+        return arr
+    try:
+        sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
+        return jax.device_put(arr, sharding)
+    except (ValueError, TypeError, NotImplementedError):
+        return arr

@@ -1,0 +1,135 @@
+"""Per-shard PS traffic accounting, surfaced to the cost model.
+
+HeterPS's cost model (Formulas 2/5) needs per-stage communication times,
+which the analytic profiles derive from nominal ``net_bw``/``ingest_bw``
+constants (``core/resources.py``).  The PS subsystem *measures* the real
+thing: every pull/push records per-shard rows, bytes and wall time.  Two
+bridges feed the measurements back:
+
+* :meth:`PSTelemetry.to_resource` — a ``ResourceType`` whose bandwidth
+  terms are replaced by the observed pull/push bandwidths, so fleet
+  definitions can be re-anchored to measured PS throughput;
+* :meth:`PSTelemetry.embedding_odt` — measured ``(sync, activation)``
+  seconds per ``B_o`` profiling window, the exact shape
+  ``LayerProfile.odt_sync``/``odt_act`` consume (``core/profiles.py``).
+
+Counters are updated from the client's puller/pusher threads; a lock
+keeps the row/byte/time triples coherent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.core.profiles import B_O
+from repro.core.resources import ResourceType
+
+
+@dataclasses.dataclass
+class ShardCounters:
+    """Cumulative traffic of one PS shard (one direction)."""
+
+    ops: int = 0
+    rows: int = 0
+    bytes: int = 0
+    seconds: float = 0.0   # wall time this shard had an op in flight
+    hot_rows: int = 0      # rows served from the DEVICE tier
+
+    def bandwidth(self) -> float:
+        return self.bytes / self.seconds if self.seconds > 0 else 0.0
+
+
+class PSTelemetry:
+    """Pull/push byte + latency accounting for an N-shard table."""
+
+    def __init__(self, num_shards: int):
+        self.num_shards = num_shards
+        self._lock = threading.Lock()
+        self.pull = [ShardCounters() for _ in range(num_shards)]
+        self.push = [ShardCounters() for _ in range(num_shards)]
+
+    def record(self, op: str, *, rows: np.ndarray, bytes_: np.ndarray,
+               seconds: float, hot_rows: np.ndarray | None = None) -> None:
+        """Account one pull/push: per-shard ``rows``/``bytes_`` arrays of
+        length ``num_shards``; ``seconds`` is the op's wall time, charged
+        to every shard the op touched (shard RPCs fly in parallel)."""
+        side = self.pull if op == "pull" else self.push
+        with self._lock:
+            for s in range(self.num_shards):
+                if rows[s] == 0:
+                    continue
+                c = side[s]
+                c.ops += 1
+                c.rows += int(rows[s])
+                c.bytes += int(bytes_[s])
+                c.seconds += seconds
+                if hot_rows is not None:
+                    c.hot_rows += int(hot_rows[s])
+
+    # --- reporting ------------------------------------------------------
+    def _totals(self, side) -> dict:
+        rows = sum(c.rows for c in side)
+        bytes_ = sum(c.bytes for c in side)
+        secs = max((c.seconds for c in side), default=0.0)
+        return {"ops": max((c.ops for c in side), default=0),
+                "rows": rows, "bytes": bytes_,
+                "seconds": secs,
+                "bandwidth": bytes_ / secs if secs > 0 else 0.0,
+                "hot_fraction": (sum(c.hot_rows for c in side) / rows
+                                 if rows else 0.0)}
+
+    def totals(self) -> dict:
+        """Aggregate pull/push traffic.  ``seconds`` is the max over
+        shards (shards serve concurrently); bandwidth is effective
+        logical-table bandwidth including any simulated RPC latency."""
+        return {"pull": self._totals(self.pull),
+                "push": self._totals(self.push)}
+
+    def shard_report(self) -> list[dict]:
+        out = []
+        for s in range(self.num_shards):
+            out.append({
+                "shard": s,
+                "pull_rows": self.pull[s].rows,
+                "pull_bytes": self.pull[s].bytes,
+                "pull_bw": self.pull[s].bandwidth(),
+                "push_rows": self.push[s].rows,
+                "push_bytes": self.push[s].bytes,
+                "push_bw": self.push[s].bandwidth(),
+                "hot_fraction": (self.pull[s].hot_rows / self.pull[s].rows
+                                 if self.pull[s].rows else 0.0),
+            })
+        return out
+
+    # --- cost-model bridges --------------------------------------------
+    def to_resource(self, base: ResourceType, *,
+                    name_suffix: str = "+ps") -> ResourceType:
+        """``base`` with its bandwidth terms replaced by measured PS
+        bandwidths: pulls bound data ingest (``ingest_bw``), pull+push
+        bound parameter sync (``net_bw``).  Unmeasured terms keep the
+        nominal constants."""
+        t = self.totals()
+        ingest = t["pull"]["bandwidth"]
+        net_b = t["pull"]["bytes"] + t["push"]["bytes"]
+        net_s = t["pull"]["seconds"] + t["push"]["seconds"]
+        net = net_b / net_s if net_s > 0 else 0.0
+        return dataclasses.replace(
+            base,
+            name=base.name + name_suffix,
+            ingest_bw=ingest if ingest > 0 else base.ingest_bw,
+            net_bw=net if net > 0 else base.net_bw,
+        )
+
+    def embedding_odt(self, num_examples: int) -> tuple[float, float]:
+        """Measured ``(odt_sync, odt_act)`` seconds per ``B_o`` window for
+        an embedding layer, from observed traffic over ``num_examples``
+        training examples — drop-in for ``LayerProfile`` fields."""
+        if num_examples <= 0:
+            return 0.0, 0.0
+        t = self.totals()
+        per_ex = (t["pull"]["seconds"] + t["push"]["seconds"]) / num_examples
+        act_per_ex = t["pull"]["seconds"] / num_examples
+        return per_ex * B_O, act_per_ex * B_O

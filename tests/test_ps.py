@@ -1,0 +1,298 @@
+"""Sharded parameter-server subsystem (repro.ps) + AccessMonitor guards.
+
+The load-bearing invariant: the sharded pull/push path is **bit-exact**
+against the single-shard oracle (`repro.parallel.ps.SparseEmbedding`) for
+random id streams — any routing, dedup or hot-cache change that perturbs
+a single mantissa bit fails here.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data import AccessMonitor, Tier, TierThresholds
+from repro.parallel.ps import SparseEmbedding, dedup_rows, sparse_pull
+from repro.ps import (
+    CTRConfig, PSClient, PSTelemetry, RoutingSpec, ShardedTable, TierPlacer,
+    train_ctr_ps,
+)
+
+VOCAB, DIM = 101, 8
+SHARD_CASES = [(s, p) for s in (1, 3, 4) for p in ("mod", "block")]
+
+
+def _rand_ids(n=91, seed=0, vocab=VOCAB):
+    return np.random.default_rng(seed).integers(
+        0, vocab, (7, n // 7)).astype(np.int32)
+
+
+def _rand_grads(ids, seed=1):
+    return np.random.default_rng(seed).standard_normal(
+        (*ids.shape, DIM)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def dense_table():
+    return jax.random.normal(jax.random.PRNGKey(0), (VOCAB, DIM))
+
+
+class TestRoutingSpec:
+    @pytest.mark.parametrize("shards,partition", SHARD_CASES)
+    def test_global_rows_partition_vocab(self, shards, partition):
+        spec = RoutingSpec(VOCAB, DIM, shards, partition)
+        assert sum(spec.shard_rows) == VOCAB
+        all_rows = np.concatenate(
+            [spec.global_rows(s) for s in range(shards)])
+        assert np.array_equal(np.sort(all_rows), np.arange(VOCAB))
+
+    @pytest.mark.parametrize("shards,partition", SHARD_CASES)
+    def test_flatten_is_slab_order(self, shards, partition):
+        spec = RoutingSpec(VOCAB, DIM, shards, partition)
+        for s in range(shards):
+            flat = spec.flatten(spec.global_rows(s))
+            assert np.array_equal(
+                flat, spec.offsets[s] + np.arange(spec.shard_rows[s]))
+
+    def test_rejects_bad_args(self):
+        with pytest.raises(ValueError):
+            RoutingSpec(VOCAB, DIM, 4, "hash")
+        with pytest.raises(ValueError):
+            RoutingSpec(4, DIM, 8)
+
+
+class TestShardedVsOracle:
+    """`ShardedTable.pull/push` bit-exact vs `SparseEmbedding`."""
+
+    @pytest.mark.parametrize("shards,partition", SHARD_CASES)
+    def test_pull_bitexact(self, dense_table, shards, partition):
+        t = ShardedTable.from_dense(dense_table, shards, partition=partition)
+        for seed in range(3):
+            ids = _rand_ids(seed=seed)
+            got = np.asarray(t.pull(ids))
+            want = np.asarray(sparse_pull(dense_table, jnp.asarray(ids)))
+            assert np.array_equal(got, want)
+
+    @pytest.mark.parametrize("shards,partition", SHARD_CASES)
+    @pytest.mark.parametrize("dedup", [False, True])
+    def test_push_bitexact(self, dense_table, shards, partition, dedup):
+        ids, g = _rand_ids(), _rand_grads(_rand_ids())
+        oracle = SparseEmbedding(VOCAB, DIM, jax.random.PRNGKey(1))
+        oracle.table = jnp.asarray(dense_table)
+        oracle.apply_sparse_grads(jnp.asarray(ids), jnp.asarray(g),
+                                  lr=0.1, dedup=dedup)
+        t = ShardedTable.from_dense(dense_table, shards, partition=partition)
+        t.push(ids, g, lr=0.1, dedup=dedup)
+        assert np.array_equal(np.asarray(t.to_dense()),
+                              np.asarray(oracle.table))
+
+    @pytest.mark.parametrize("shards,partition", SHARD_CASES)
+    def test_dense_roundtrip(self, dense_table, shards, partition):
+        t = ShardedTable.from_dense(dense_table, shards, partition=partition)
+        assert np.array_equal(np.asarray(t.to_dense()),
+                              np.asarray(dense_table))
+        assert [s.shape[0] for s in t.shards] == list(t.spec.shard_rows)
+
+    def test_out_of_range_ids_raise(self, dense_table):
+        t = ShardedTable.from_dense(dense_table, 4)
+        with pytest.raises(ValueError, match="out of range"):
+            t.pull(np.array([0, VOCAB]))
+        with pytest.raises(ValueError, match="out of range"):
+            t.push(np.array([-1]), np.zeros((1, DIM), np.float32), lr=0.1)
+
+
+class TestDedup:
+    def test_dedup_rows_sums_duplicates_in_stream_order(self):
+        ids = jnp.array([5, 2, 5, 2, 5])
+        g = jnp.arange(5, dtype=jnp.float32)[:, None] * jnp.ones((5, 3))
+        uids, summed = dedup_rows(ids, g, fill_id=10)
+        assert np.asarray(uids).tolist() == [2, 5, 10, 10, 10]
+        np.testing.assert_array_equal(np.asarray(summed[0]), [4.0] * 3)
+        np.testing.assert_array_equal(np.asarray(summed[1]), [6.0] * 3)
+
+    def test_sgd_sum_equivalence(self):
+        """With plain SGD, pushing raw duplicates and pushing the deduped
+        sum land on the same row values (up to fp association)."""
+        ids, g = _rand_ids(), _rand_grads(_rand_ids())
+        out = {}
+        for dedup in (False, True):
+            emb = SparseEmbedding(VOCAB, DIM, jax.random.PRNGKey(2))
+            emb.apply_sparse_grads(jnp.asarray(ids), jnp.asarray(g),
+                                   lr=0.05, dedup=dedup)
+            out[dedup] = np.asarray(emb.table)
+        np.testing.assert_allclose(out[True], out[False], rtol=0, atol=1e-5)
+
+
+class TestHotCache:
+    def test_write_through_keeps_cache_coherent(self, dense_table):
+        """Interleaved repin/push/pull stays bit-exact vs the oracle —
+        serving a row from the hot cache must be value-neutral."""
+        rng = np.random.default_rng(3)
+        oracle = SparseEmbedding(VOCAB, DIM, jax.random.PRNGKey(1))
+        oracle.table = jnp.asarray(dense_table)
+        monitor = AccessMonitor(VOCAB)
+        t = ShardedTable.from_dense(dense_table, 3, monitor=monitor,
+                                    telemetry=PSTelemetry(3), hot_capacity=16)
+        placer = TierPlacer(t, monitor, interval=1)
+        for round_ in range(4):
+            ids = rng.integers(0, 40, (50,)).astype(np.int32)  # skewed head
+            g = rng.standard_normal((50, DIM)).astype(np.float32)
+            got = np.asarray(t.pull(ids))
+            want = np.asarray(sparse_pull(oracle.table, jnp.asarray(ids)))
+            assert np.array_equal(got, want), f"pull diverged at {round_}"
+            t.push(ids, g, lr=0.1)
+            oracle.apply_sparse_grads(jnp.asarray(ids), jnp.asarray(g), lr=0.1)
+            placer.repin()
+        assert np.array_equal(np.asarray(t.to_dense()),
+                              np.asarray(oracle.table))
+        assert placer.last_stats["cached_rows"] > 0
+        # skewed pulls land in the DEVICE tier once the cache is populated
+        assert t.telemetry.totals()["pull"]["hot_fraction"] > 0
+
+    def test_capacity_truncation_keeps_hottest(self, dense_table):
+        monitor = AccessMonitor(VOCAB, TierThresholds(hot_fraction=0.95))
+        t = ShardedTable.from_dense(dense_table, 2, monitor=monitor,
+                                    hot_capacity=2)
+        monitor.record(np.array([7] * 50 + [3] * 30 + [9] * 10))
+        placer = TierPlacer(t, monitor, interval=1)
+        stats = placer.repin()
+        assert stats["cached_rows"] == 2
+        slot = np.asarray(t.slot_of)
+        assert slot[7] >= 0 and slot[3] >= 0 and slot[9] < 0
+
+    def test_placer_rejects_mismatched_monitor(self, dense_table):
+        with pytest.raises(ValueError, match="monitor covers"):
+            TierPlacer(ShardedTable.from_dense(dense_table, 2),
+                       AccessMonitor(VOCAB + 1))
+
+
+class TestAccessMonitorGuards:
+    def test_out_of_range_record_raises(self):
+        m = AccessMonitor(10)
+        with pytest.raises(ValueError, match="row ids out of range"):
+            m.record(np.array([0, 10]))
+        with pytest.raises(ValueError, match="row ids out of range"):
+            m.record(np.array([-1, 3]))
+        assert m.counts.sum() == 0  # failed record must not half-apply
+
+    def test_empty_record_is_noop(self):
+        m = AccessMonitor(10)
+        m.record(np.array([], dtype=np.int64))
+        assert m.counts.sum() == 0
+
+    def test_zero_row_table_placement(self):
+        m = AccessMonitor(0)
+        assert m.placement().shape == (0,)
+        s = m.stats()
+        assert (s["device_rows"], s["host_rows"], s["disk_rows"]) == (0, 0, 0)
+        m.record(np.array([], dtype=np.int64))  # still a no-op
+
+    def test_ema_aging_placement_drift(self):
+        """The hot set follows a shifted access distribution after age():
+        old traffic decays, new traffic takes over the DEVICE tier."""
+        m = AccessMonitor(100, TierThresholds(hot_fraction=0.1, ema=0.5))
+        region_a, region_b = np.arange(0, 10), np.arange(50, 60)
+        m.record(np.repeat(region_a, 100))
+        hot0 = np.flatnonzero(m.placement() == Tier.DEVICE)
+        assert set(hot0) <= set(region_a) and hot0.size > 0
+        # distribution shifts to region B; EMA ages A's counts away
+        for _ in range(6):
+            m.age()
+            m.record(np.repeat(region_b, 100))
+        hot1 = np.flatnonzero(m.placement() == Tier.DEVICE)
+        assert hot1.size > 0 and set(hot1) <= set(region_b)
+
+
+class TestPSClient:
+    def _batches(self, n, seed=0, vocab=VOCAB):
+        rng = np.random.default_rng(seed)
+        return [{"ids": rng.integers(0, vocab, (13,)).astype(np.int32),
+                 "step": i} for i in range(n)]
+
+    def test_yields_in_order_with_correct_rows(self, dense_table):
+        t = ShardedTable.from_dense(dense_table, 3)
+        batches = self._batches(8)
+        client = PSClient(t, iter(batches))
+        seen = []
+        for b, rows in client:
+            seen.append(b["step"])
+            want = np.asarray(dense_table)[b["ids"]]
+            assert np.array_equal(np.asarray(rows), want)
+        client.close()
+        assert seen == list(range(8))
+
+    def test_close_drains_all_pushes(self, dense_table):
+        t = ShardedTable.from_dense(dense_table, 4)
+        batches = self._batches(10, seed=4)
+        client = PSClient(t, iter(batches))
+        counts = np.zeros(VOCAB)
+        for b, _rows in client:
+            np.add.at(counts, b["ids"], 1.0)
+            client.push(b["ids"], np.ones((13, DIM), np.float32), lr=0.5)
+        client.close()
+        assert client.stats()["steps_pushed"] == 10
+        got = np.asarray(t.to_dense()) - np.asarray(dense_table)
+        np.testing.assert_allclose(
+            got, -0.5 * counts[:, None] * np.ones((VOCAB, DIM)),
+            rtol=0, atol=1e-5)
+
+    def test_push_after_close_raises(self, dense_table):
+        t = ShardedTable.from_dense(dense_table, 2)
+        client = PSClient(t, iter(self._batches(2)))
+        list(client)
+        client.close()
+        with pytest.raises(RuntimeError, match="close"):
+            client.push(np.array([1]), np.zeros((1, DIM), np.float32), lr=0.1)
+
+
+class TestTelemetry:
+    def test_pull_push_byte_accounting(self, dense_table):
+        tel = PSTelemetry(2)
+        t = ShardedTable.from_dense(dense_table, 2, telemetry=tel)
+        ids = np.array([0, 1, 2, 3, 1], np.int32)   # one duplicate
+        t.pull(ids)
+        totals = tel.totals()
+        assert totals["pull"]["rows"] == 5
+        assert totals["pull"]["bytes"] == 5 * DIM * 4
+        t.push(ids, np.ones((5, DIM), np.float32), lr=0.1)
+        totals = tel.totals()
+        # deduped wire: 4 distinct rows, each D floats + an id
+        assert totals["push"]["rows"] == 4
+        assert totals["push"]["bytes"] == 4 * (DIM * 4 + 4)
+        per_shard = tel.shard_report()
+        assert sum(r["pull_rows"] for r in per_shard) == 5
+
+    def test_cost_model_bridge(self, dense_table):
+        from repro.core.resources import CPU_CORE
+
+        tel = PSTelemetry(2)
+        t = ShardedTable.from_dense(dense_table, 2, telemetry=tel)
+        for seed in range(3):
+            t.pull(_rand_ids(seed=seed))
+            t.push(_rand_ids(seed=seed),
+                   _rand_grads(_rand_ids(seed=seed)), lr=0.1)
+        res = tel.to_resource(CPU_CORE)
+        assert res.name == "cpu+ps"
+        assert res.ingest_bw > 0 and res.net_bw > 0
+        assert res.price == CPU_CORE.price          # only bandwidths change
+        sync_t, act_t = tel.embedding_odt(num_examples=300)
+        assert sync_t > act_t > 0
+
+
+class TestWorkload:
+    def test_sync_and_async_train(self):
+        cfg = CTRConfig(vocab=2000, emb_dim=8, slots=6, tower=(32,),
+                        batch=64, lr=0.1)
+        for mode in ("sync", "async"):
+            s = train_ctr_ps(cfg, steps=25, num_shards=3, mode=mode,
+                             repin_interval=10)
+            assert s["steps"] == 25
+            assert s["loss_decreased"], f"{mode}: {s['first_loss']} -> " \
+                                        f"{s['last_loss']}"
+            assert s["repins"] == 2
+            assert s["pull_gb"] > 0 and s["push_gb"] > 0
+            assert s["measured_ingest_bw"] > 0
+
+    def test_bad_mode_rejected(self):
+        with pytest.raises(ValueError, match="sync|async"):
+            train_ctr_ps(CTRConfig(vocab=100), steps=1, mode="turbo")
