@@ -2,19 +2,33 @@
 2EMB, NCE; plus MATCHNET with 32 resource types) — RL-LSTM's time does not
 grow with the number of resource types.
 
-Also measures the inner-loop plan-evaluation throughput (plans/s) of the
-scalar oracle vs the batched cost model — every search scheduler now
-routes plan scoring through the batched path, so this ratio is the direct
-speedup of the scheduling hot loop.
+Three measurements:
+
+* per-method scheduling wall time per model (the Table-3 reproduction);
+  both RL methods schedule all five cases through ONE vmapped
+  ``RLScheduler.schedule_many`` call per method;
+* inner-loop plan-evaluation throughput (plans/s) of the scalar oracle vs
+  the NumPy batched cost model;
+* RL search-round throughput of the fused single-jit path vs the unfused
+  per-round loop, with jit compile time warmed up and reported as a
+  separate ``compile_s`` metric (steady-state ``rounds_per_s`` only).
+
+``--smoke`` runs the throughput measurements and enforces the fused
+speedup gate (exits nonzero below :data:`FUSED_GATE`) — wired into CI.
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import numpy as np
 
-from benchmarks.common import emit, fmt_cost
+try:
+    from benchmarks.common import emit, fmt_cost
+except ImportError:  # direct-script invocation (python benchmarks/bench_...)
+    from common import emit, fmt_cost
 from repro.core import (
     SchedulingPlan,
     TrainingJob,
@@ -24,11 +38,14 @@ from repro.core import (
     paper_model_profiles,
     soft_plan_cost,
 )
-from repro.core.schedulers import ALL_SCHEDULERS
+from repro.core.schedulers import ALL_SCHEDULERS, RLScheduler
 
 JOB = TrainingJob()
 METHODS = ("RL-LSTM", "RL-RNN", "BO", "Genetic", "Greedy", "GPU", "CPU",
            "Heuristic")
+
+#: minimum fused-vs-unfused steady-state rounds/s ratio (CI smoke gate)
+FUSED_GATE = 5.0
 
 
 def bench_eval_throughput(model: str = "MATCHNET", n_plans: int = 2048,
@@ -59,16 +76,106 @@ def bench_eval_throughput(model: str = "MATCHNET", n_plans: int = 2048,
          f"plans_per_s={batched_ps:.0f} speedup={batched_ps / scalar_ps:.1f}x")
 
 
-def run() -> None:
-    bench_eval_throughput()
+def bench_rl_search_throughput(
+    model: str = "MATCHNET",
+    fused_rounds: int = 100,
+    unfused_rounds: int = 30,
+    seed: int = 0,
+) -> float:
+    """Steady-state REINFORCE rounds/s: fused single-jit vs per-round loop.
+
+    Compile time is excluded from both sides: the fused scheduler reports
+    its first-chunk compile separately (``extra["compile_s"]``), and the
+    unfused loop gets an explicit warm-up run so its per-round jits
+    (sampling, gradient) are cached before timing.  Returns the speedup.
+    """
+    fleet = default_fleet()
+    profs = paper_model_profiles(model, fleet)
+    stop_never = 10**9
+
+    # fused: one run; chunk 0 pays the compile, chunks 1.. are steady state
+    sched_f = RLScheduler(rounds=fused_rounds, seed=seed, fused=True,
+                          chunk_rounds=20, early_stop_rounds=stop_never)
+    r_f = sched_f.schedule(profs, fleet, JOB)
+    compile_s = r_f.extra["compile_s"]
+    fused_rps = r_f.extra["rounds_per_s"]
+
+    # unfused: warm-up compiles the per-round jits, then time a fresh search
+    # (extra["rounds_per_s"] covers the round loop only — same scope as the
+    # fused metric, excluding anchors/greedy decode/final evaluation)
+    RLScheduler(rounds=2, seed=seed, fused=False).schedule(profs, fleet, JOB)
+    sched_u = RLScheduler(rounds=unfused_rounds, seed=seed, fused=False,
+                          early_stop_rounds=stop_never)
+    r_u = sched_u.schedule(profs, fleet, JOB)
+    unfused_rps = r_u.extra["rounds_per_s"]
+
+    speedup = fused_rps / unfused_rps
+    emit(f"table3/rl_search/{model}/compile", compile_s * 1e6,
+         f"compile_s={compile_s:.2f}")
+    emit(f"table3/rl_search/{model}/fused", 1e6 / fused_rps,
+         f"rounds_per_s={fused_rps:.1f}")
+    emit(f"table3/rl_search/{model}/unfused", 1e6 / unfused_rps,
+         f"rounds_per_s={unfused_rps:.1f} speedup={speedup:.1f}x")
+    return speedup
+
+
+def _cases():
     cases = [(m, default_fleet(), "") for m in
              ("MATCHNET", "CTRDNN", "2EMB", "NCE")]
     cases.append(("MATCHNET", make_fleet(32), "(32)"))
-    for model, fleet, tag in cases:
-        profs = paper_model_profiles(model, fleet)
-        for name in METHODS:
-            kw = {"rounds": 40} if name.startswith("RL") else {}
-            sched = ALL_SCHEDULERS[name](**kw)
-            r = sched.schedule(profs, fleet, JOB)
-            emit(f"table3/{model}{tag}/{name}", r.wall_time_s * 1e6,
-                 f"cost={fmt_cost(r.cost)}")
+    return cases
+
+
+def run() -> None:
+    bench_eval_throughput()
+    bench_rl_search_throughput()
+    cases = _cases()
+    specs = [(paper_model_profiles(m, fleet), fleet, JOB)
+             for m, fleet, _ in cases]
+    for name in METHODS:
+        if name.startswith("RL"):
+            # all five Table-3 cases in one schedule_many call (vmapped
+            # per fleet-size group); wall time is the shared group time;
+            # chunk_rounds divides rounds so no tail rounds are discarded
+            results = ALL_SCHEDULERS[name](
+                rounds=40, chunk_rounds=20).schedule_many(specs)
+            for (model, _, tag), r in zip(cases, results):
+                # wall_time_s is the whole vmapped group's wall; report
+                # each model's amortized share so rows stay comparable
+                # across group sizes (the Table-3 flat-in-types claim)
+                share = r.wall_time_s / r.extra["vmapped_models"]
+                emit(f"table3/{model}{tag}/{name}", share * 1e6,
+                     f"cost={fmt_cost(r.cost)} rounds={r.extra['rounds']} "
+                     f"vmapped={r.extra['vmapped_models']} "
+                     f"group_wall_s={r.wall_time_s:.2f}")
+        else:
+            for model, fleet, tag in cases:
+                profs = paper_model_profiles(model, fleet)
+                r = ALL_SCHEDULERS[name]().schedule(profs, fleet, JOB)
+                emit(f"table3/{model}{tag}/{name}", r.wall_time_s * 1e6,
+                     f"cost={fmt_cost(r.cost)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="throughput benchmarks only; enforce the fused "
+                         f"speedup gate (>= {FUSED_GATE}x)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        bench_eval_throughput(n_plans=512)
+        speedup = bench_rl_search_throughput(fused_rounds=60,
+                                             unfused_rounds=15)
+        if speedup < FUSED_GATE:
+            print(f"# FAIL: fused RL search speedup {speedup:.1f}x < "
+                  f"{FUSED_GATE}x gate", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"# OK: fused RL search speedup {speedup:.1f}x >= "
+              f"{FUSED_GATE}x", file=sys.stderr)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -84,6 +84,10 @@ class CostCache:
         self._cache: dict[tuple[int, ...], float] = {}
         self._soft: dict[tuple[int, ...], float] = {}
         self.evaluations = 0
+        #: True once seed_from_device wrote device-scored entries — they
+        #: match the NumPy oracle only to float tolerance, so final-plan
+        #: selection re-verifies the winner when this is set
+        self.device_seeded = False
 
     @staticmethod
     def _keys(assignments) -> list[tuple[int, ...]]:
@@ -127,6 +131,47 @@ class CostCache:
                 self._soft[k] = float(s)
         return np.array([self._soft[k] for k in keys])
 
+    def seed_from_device(
+        self, assignments, soft_costs, feasible=None
+    ) -> int:
+        """Bulk-insert already-computed surrogate costs (fused RL search).
+
+        The fused search scores whole chunks of rounds on device
+        (``jax_cost.soft_cost``) and back-fills the memo table once per
+        chunk — this is that entry point.  ``soft_costs[i]`` is the graded
+        surrogate for ``assignments[i]``; ``feasible[i]``, when given,
+        lets the true-cost cache be filled too (feasible ⇒ true == soft,
+        infeasible ⇒ true == inf), so ``best()`` sees device-scored plans.
+
+        ``evaluations`` accounting stays exact: each *novel* plan counts
+        once, plans already scored (by either path) count zero, and
+        existing entries are never overwritten — a plan first evaluated by
+        the NumPy oracle keeps its oracle-exact value.  Returns the number
+        of novel plans inserted.
+        """
+        soft = np.asarray(soft_costs, dtype=np.float64)
+        novel = 0
+        for key, s, f in zip(
+            self._keys(assignments),
+            soft,
+            np.asarray(feasible) if feasible is not None else soft,
+        ):
+            if key in self._soft:
+                continue
+            cached = self._cache.get(key)
+            if cached is not None:
+                # true cost known exactly (e.g. anchors): reuse it for the
+                # surrogate when feasible, keep the device value otherwise
+                self._soft[key] = cached if math.isfinite(cached) else float(s)
+                continue
+            novel += 1
+            self.evaluations += 1
+            self._soft[key] = float(s)
+            if feasible is not None:
+                self._cache[key] = float(s) if f else INFEASIBLE
+                self.device_seeded = True
+        return novel
+
     def __call__(self, assignment: Sequence[int]) -> float:
         key = tuple(int(a) for a in assignment)
         if key not in self._cache:
@@ -138,6 +183,20 @@ class CostCache:
         if key not in self._soft:
             self.batch_soft([key])
         return self._soft[key]
+
+    def pin_true(self, assignment: Sequence[int], cost: float) -> None:
+        """Overwrite a memo entry with an oracle-computed true cost.
+
+        Unlike :meth:`seed_from_device`, this *does* overwrite: it exists
+        for the final-selection path to correct a device-scored entry
+        whose feasibility the NumPy oracle disagrees with (possible only
+        on exact constraint boundaries, where f64 op-reordering flips a
+        comparison).  Does not touch ``evaluations``.
+        """
+        key = tuple(int(a) for a in assignment)
+        self._cache[key] = float(cost)
+        if math.isfinite(cost):
+            self._soft[key] = float(cost)
 
     def best(self) -> tuple[tuple[int, ...], float]:
         feas = {k: v for k, v in self._cache.items() if math.isfinite(v)}

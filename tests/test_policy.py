@@ -75,9 +75,67 @@ class TestPolicy:
         assert float(lp_new) < float(lp_old)
 
 
+class TestMaskedPolicy:
+    """Layer-mask support for the padded multi-model (vmapped) search."""
+
+    def test_masked_logp_matches_unpadded(self, cell_and_params):
+        """Teacher-forced log-prob with padded feature rows + mask must
+        equal the unpadded evaluation (padding sits at the end, so real
+        steps see identical inputs and padded steps are zero-weighted)."""
+        cell, params = cell_and_params
+        actions, logp = pol.sample_plan(params, FEATS, KEY, cell=cell,
+                                        num_types=T)
+        fpad, mask = pol.layer_features(PROFS, pad_to=len(PROFS) + 4,
+                                        return_mask=True)
+        apad = jnp.concatenate([actions, jnp.zeros(4, actions.dtype)])
+        lp = pol.plan_logp(params, jnp.asarray(fpad), apad, cell=cell,
+                           num_types=T, mask=jnp.asarray(mask))
+        assert float(jnp.abs(lp - logp)) < 1e-5
+
+    def test_masked_sampling_prefix_matches_unpadded(self, cell_and_params):
+        """Real-layer actions are unchanged by trailing padding (each
+        plan's per-step key stream is a prefix of the padded one)."""
+        cell, params = cell_and_params
+        actions, _ = pol.sample_plan(params, FEATS, KEY, cell=cell,
+                                     num_types=T)
+        fpad, mask = pol.layer_features(PROFS, pad_to=len(PROFS) + 4,
+                                        return_mask=True)
+        apad, _ = pol.sample_plan(params, jnp.asarray(fpad), KEY, cell=cell,
+                                  num_types=T, mask=jnp.asarray(mask))
+        np.testing.assert_array_equal(
+            np.asarray(actions), np.asarray(apad)[: len(PROFS)])
+
+
 class TestFeatures:
     def test_feature_rows_per_layer(self):
         assert FEATS.shape[0] == len(PROFS)
+
+    def test_rejects_models_deeper_than_max_layers(self):
+        """Regression: layers past MAX_LAYERS-1 used to silently share one
+        index one-hot slot; now the overflow is a clear error."""
+        from repro.core.profiles import ctrdnn_variant, profile_layers
+
+        deep = profile_layers(
+            ctrdnn_variant(pol.MAX_LAYERS + 2), FLEET
+        )
+        with pytest.raises(ValueError, match="MAX_LAYERS"):
+            pol.layer_features(deep)
+        # the boundary case still works and keeps distinct slots
+        ok = profile_layers(ctrdnn_variant(pol.MAX_LAYERS), FLEET)
+        f = pol.layer_features(ok)
+        for i in range(pol.MAX_LAYERS):
+            assert f[i, i] == 1.0
+            assert f[i, : pol.MAX_LAYERS].sum() == 1.0
+
+    def test_pad_to_and_mask(self):
+        f, m = pol.layer_features(PROFS, pad_to=12, return_mask=True)
+        assert f.shape[0] == 12 and m.shape == (12,)
+        assert m[: len(PROFS)].all() and not m[len(PROFS):].any()
+        assert (f[len(PROFS):] == 0.0).all()
+
+    def test_pad_to_too_small_rejected(self):
+        with pytest.raises(ValueError):
+            pol.layer_features(PROFS, pad_to=len(PROFS) - 1)
 
     def test_fig3_features_present(self):
         """one-hot index + one-hot kind + (input, weight, comm) scalars."""
