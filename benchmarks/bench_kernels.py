@@ -1,24 +1,117 @@
 """Kernel microbenchmarks: XLA reference wall time per shape + interpret-
 mode max-abs error of the Pallas kernel vs the oracle (real-TPU timing is
-out of scope on this CPU container; the error column proves correctness)."""
+out of scope on this CPU container; the error column proves correctness).
+
+The MoE section additionally *gates* a real speedup: the fused-layout
+slot formulation (the same algorithm the Pallas kernels run, executed as
+jnp gathers on CPU) must beat the reference scatter/gather
+dispatch+combine round-trip.  ``--smoke`` runs just that gate for CI
+(exits nonzero below ``MOE_GATE``×).
+
+  PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke]
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit
+try:
+    from benchmarks.common import emit
+except ImportError:  # run directly: python benchmarks/bench_kernels.py
+    from common import emit
+from repro.kernels import moe as moe_k
 from repro.kernels import ref
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.flash_attention import flash_attention
+from repro.nn import moe as moe_mod
 
 KEY = jax.random.PRNGKey(0)
 
+#: CI gate: fused-layout dispatch+combine vs the reference scatter/gather
+#: round-trip.  The gate shape measures 3.9–6.8× on the CPU container
+#: (smaller shapes swing 1.4–2.7× under scheduler noise — too flaky to
+#: gate), so 1.5× leaves a wide margin for CI jitter.
+MOE_GATE = 1.5
+MOE_GATE_SHAPE = (4, 1024, 512, 16, 2)      # (G, S, D, E, K)
 
-def run() -> None:
+
+def _timeit(fn, *args, iters: int = 10) -> float:
+    jax.block_until_ready(fn(*args))        # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _moe_roundtrips(G, S, D, E, K, cf=1.25):
+    """Build jitted ref / slot dispatch+combine round-trips + err probe."""
+    p = moe_mod.init_moe(KEY, D, 2 * D, E)
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (G, S, D))
+    C = moe_mod.moe_capacity(S, E, K, cf)
+    _, gate, eid_f, pos, keep = moe_mod.moe_route(p["router"], x, top_k=K,
+                                                  capacity=C)
+    safe_pos = jnp.where(keep, pos, 0)
+    w = (gate.reshape(G, S, K) * keep.reshape(G, S, K))
+    keepf = keep.astype(jnp.float32)
+    eid3 = eid_f.reshape(G, S, K)
+    pos3 = safe_pos.reshape(G, S, K)
+
+    @jax.jit
+    def rt_ref(x):
+        buf = moe_mod.ref_dispatch(x, eid_f, safe_pos, keep, num_experts=E,
+                                   capacity=C, top_k=K)
+        return moe_mod.ref_combine(buf, eid_f, safe_pos,
+                                   w.reshape(G, S * K), top_k=K)
+
+    @jax.jit
+    def rt_slot(x):
+        buf = moe_k.moe_dispatch(x, eid_f, pos, keepf, E, C, K, "slot")
+        return moe_k.moe_combine(buf, eid3, pos3, w, "slot")
+
+    def rt_interpret(x):
+        buf = moe_k.moe_dispatch(x, eid_f, pos, keepf, E, C, K, "interpret")
+        return moe_k.moe_combine(buf, eid3, pos3, w, "interpret")
+
+    return x, rt_ref, rt_slot, rt_interpret
+
+
+def run_moe(*, smoke: bool = False) -> None:
+    shapes = [MOE_GATE_SHAPE] if smoke else [
+        (8, 512, 256, 8, 2), MOE_GATE_SHAPE, (8, 256, 256, 64, 8),
+    ]
+    for G, S, D, E, K in shapes:
+        x, rt_ref, rt_slot, rt_interpret = _moe_roundtrips(G, S, D, E, K)
+        us_ref = _timeit(rt_ref, x)
+        us_slot = _timeit(rt_slot, x)
+        speedup = us_ref / us_slot
+        err = float(jnp.abs(rt_slot(x) - rt_ref(x)).max())
+        emit(f"kernel/moe_rt_ref/G{G}S{S}D{D}E{E}K{K}", us_ref,
+             f"maxerr={err:.2e}")
+        emit(f"kernel/moe_rt_fused/G{G}S{S}D{D}E{E}K{K}", us_slot,
+             f"speedup={speedup:.2f}x")
+        if (G, S, D, E, K) == MOE_GATE_SHAPE and smoke:
+            if speedup < MOE_GATE:
+                raise SystemExit(
+                    f"fused MoE dispatch+combine speedup {speedup:.2f}x "
+                    f"below the {MOE_GATE}x gate")
+            print(f"# moe gate ok: {speedup:.2f}x >= {MOE_GATE}x")
+    if not smoke:
+        # interpret-mode correctness probe on a small shape (slow path)
+        G, S, D, E, K = 2, 32, 64, 4, 2
+        x, rt_ref, _, rt_interpret = _moe_roundtrips(G, S, D, E, K)
+        err = float(jnp.abs(rt_interpret(x) - rt_ref(x)).max())
+        emit(f"kernel/moe_interpret/G{G}S{S}D{D}E{E}K{K}", 0.0,
+             f"maxerr={err:.2e}")
+
+
+def run(smoke: bool = False) -> None:
+    if smoke:
+        run_moe(smoke=True)
+        return
     for B, H, S, hd in ((1, 4, 512, 64), (2, 8, 1024, 128)):
         q = jax.random.normal(KEY, (B, H, S, hd))
         k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, S, hd))
@@ -47,3 +140,14 @@ def run() -> None:
         err = float(jnp.abs(embedding_bag(ids, table, interpret=True)
                             - ref.embedding_bag_ref(ids, table)).max())
         emit(f"kernel/embedding_bag/N{N}bag{bag}", us, f"maxerr={err:.2e}")
+
+    run_moe(smoke=False)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: just the gated fused-MoE speedup check")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -27,21 +27,41 @@ class SyntheticTokenDataset:
 
     Step ``i`` is a pure function of (seed, i) — restart-safe, and every
     host can generate its own shard without coordination.
+
+    Tokens are drawn from a Zipfian unigram distribution
+    (``p(t) ∝ 1/(t+1)^a``, the natural-language shape), not uniform:
+    with i.i.d. *uniform* tokens the cross-entropy floor is ``log V`` and
+    the only achievable descent is flattening the initial logit variance
+    — a signal small enough that batch noise buries it for some archs
+    (the OLMoE plateau, see DESIGN.md §MoE kernels).  A skewed marginal
+    gives training real, quickly-learnable headroom
+    (``H(zipf) ≪ log V``) so "loss decreases" measures optimization, not
+    luck.  ``zipf_a=0`` restores uniform sampling.
     """
 
     def __init__(self, vocab: int, batch_size: int, seq_len: int, *,
-                 seed: int = 0, context_len: int = 0, d_model: int = 0):
+                 seed: int = 0, context_len: int = 0, d_model: int = 0,
+                 zipf_a: float = 1.2):
         self.vocab = vocab
         self.batch_size = batch_size
         self.seq_len = seq_len
         self.seed = seed
         self.context_len = context_len
         self.d_model = d_model
+        if zipf_a:
+            w = 1.0 / np.arange(1, vocab + 1, dtype=np.float64) ** zipf_a
+            self._probs = w / w.sum()
+        else:
+            self._probs = None
 
     def batch(self, step: int) -> dict:
         rng = np.random.default_rng((self.seed, step))
-        toks = rng.integers(0, self.vocab,
-                            (self.batch_size, self.seq_len + 1), dtype=np.int32)
+        shape = (self.batch_size, self.seq_len + 1)
+        if self._probs is None:
+            toks = rng.integers(0, self.vocab, shape, dtype=np.int32)
+        else:
+            toks = rng.choice(self.vocab, size=shape,
+                              p=self._probs).astype(np.int32)
         out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
         if self.context_len:
             out["context"] = rng.standard_normal(

@@ -1,5 +1,10 @@
 """Pallas TPU kernels (validated interpret=True on CPU) + jnp oracles."""
 
-from repro.kernels.ops import embedding_bag, flash_attention
+from repro.kernels.ops import (
+    embedding_bag,
+    flash_attention,
+    moe_combine,
+    moe_dispatch,
+)
 
-__all__ = ["embedding_bag", "flash_attention"]
+__all__ = ["embedding_bag", "flash_attention", "moe_combine", "moe_dispatch"]

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels import moe as moe_kernels
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag_kernel
 from repro.kernels.flash_attention import (
     DEFAULT_BLOCK_K,
@@ -56,3 +57,33 @@ def embedding_bag(ids, table, *, impl: str = "auto"):
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.embedding_bag_ref(ids, table)
     return _embedding_bag_kernel(ids, table, interpret=impl == "interpret")
+
+
+def _moe_impl(impl: str) -> str:
+    """Resolve the MoE impl: ``auto`` compiles on TPU, otherwise runs the
+    jnp slot formulation (same algorithm, fast on CPU); ``interpret``
+    executes the kernel bodies in the Pallas interpreter."""
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "slot"
+    if impl not in ("slot", "interpret", "pallas"):
+        raise ValueError(
+            f"unknown MoE impl {impl!r}: expected auto/slot/interpret/"
+            "pallas (the scatter/gather oracle is nn.moe.moe_ffn's "
+            "impl='ref', not a kernels-layer path)")
+    return impl
+
+
+def moe_dispatch(x, eid, pos, wtok, *, num_experts: int, capacity: int,
+                 top_k: int, impl: str = "auto"):
+    """Capacity-slab dispatch (G,S,D)→(G,E,C,D); differentiable.
+
+    ``impl="ref"`` is not accepted here — the reference scatter/gather
+    oracle lives in :func:`repro.nn.moe.moe_ffn` (``impl="ref"``).
+    """
+    return moe_kernels.moe_dispatch(x, eid, pos, wtok, num_experts,
+                                    capacity, top_k, _moe_impl(impl))
+
+
+def moe_combine(buf, eid, pos, w, *, impl: str = "auto"):
+    """Gate-weighted combine (G,E,C,D)→(G,S,D); differentiable."""
+    return moe_kernels.moe_combine(buf, eid, pos, w, _moe_impl(impl))

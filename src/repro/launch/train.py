@@ -37,7 +37,7 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
           microbatch: int | None = None, seed: int = 0,
           checkpoint_dir: str | None = None, log_every: int = 10,
           compute_dtype=jnp.float32) -> dict:
-    cfg = get_config(arch, reduced=reduced)
+    cfg = get_config(arch, reduced=reduced) if isinstance(arch, str) else arch
     key = jax.random.PRNGKey(seed)
     params, opt_state = init_train_state(cfg, key)
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
@@ -65,10 +65,13 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
         save_checkpoint(checkpoint_dir, params=params, opt_state=opt_state,
                         step=steps, metadata={"arch": cfg.name})
         print(f"checkpoint -> {checkpoint_dir}")
+    # head/tail means: a single-sample first-vs-last comparison is noise
+    # on fresh-random batches (per-batch loss σ ≈ 0.05 at smoke scale)
+    k = max(1, min(5, steps // 4))
     return {
         "arch": cfg.name, "params": n_params, "steps": steps,
         "first_loss": losses[0], "last_loss": losses[-1],
-        "loss_decreased": losses[-1] < losses[0],
+        "loss_decreased": float(np.mean(losses[-k:])) < float(np.mean(losses[:k])),
         "seconds": time.time() - t0,
     }
 

@@ -54,6 +54,11 @@ class ArchConfig:
     moe_top_k: int = 0
     moe_d_ff: int = 0                   # per-expert FFN width
     moe_capacity_factor: float = 1.25   # GShard per-group expert capacity
+    #: MoE dispatch/combine data path: "auto" → fused Pallas kernels on
+    #: TPU, jnp slot formulation elsewhere; "ref" pins the pure-JAX
+    #: scatter/gather oracle; "interpret"/"slot"/"pallas" force a path
+    #: (see repro/kernels/moe.py)
+    moe_impl: str = "auto"
     # positions
     rope_theta: float = 10000.0
     pos_embed: Literal["rope", "learned", "none"] = "rope"

@@ -196,7 +196,8 @@ def _apply_layer(cfg, spec: LayerSpec, p, x, *, positions, cross_kv=None,
         y = moe_mod.dense_ffn(p["ffn"], h)
     elif spec.ffn == "moe":
         y, moe_aux = moe_mod.moe_ffn(p["ffn"], h, top_k=cfg.moe_top_k,
-                                     capacity_factor=cfg.moe_capacity_factor)
+                                     capacity_factor=cfg.moe_capacity_factor,
+                                     impl=cfg.moe_impl)
         aux = aux + moe_aux["aux_loss"]
     elif spec.ffn == "channel_mix":
         y = rwkv_mod.channel_mix_seq(p["ffn"], h)
@@ -428,7 +429,8 @@ def _decode_layer(cfg, spec: LayerSpec, p, x, cache, index):
         y = moe_mod.dense_ffn(p["ffn"], h)
     elif spec.ffn == "moe":
         y, _ = moe_mod.moe_ffn(p["ffn"], h, top_k=cfg.moe_top_k,
-                               capacity_factor=cfg.moe_capacity_factor)
+                               capacity_factor=cfg.moe_capacity_factor,
+                               impl=cfg.moe_impl)
     elif spec.ffn == "channel_mix":
         y, cm = rwkv_mod.decode_channel_mix(p["ffn"], h, cache)
         cache = {**cache, **cm}

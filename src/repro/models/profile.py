@@ -13,6 +13,7 @@ from __future__ import annotations
 from repro.configs import get_config
 from repro.core.profiles import LayerProfile, profile_layers
 from repro.models.config import ArchConfig
+from repro.nn.moe import moe_capacity
 
 _F = 4  # fp32 bytes
 
@@ -27,6 +28,7 @@ def _layer_rows(cfg: ArchConfig, *, seq: int) -> list[tuple]:
         spec = cfg.pattern[i % len(cfg.pattern)]
         flops = 0.0
         w_bytes = 0.0
+        in_bytes = d * _F
         if spec.mixer in ("attn", "cross_attn", "attn+cross"):
             proj = 2.0 * d * (H + 2 * KV) * hd + 2.0 * H * hd * d
             ctx = min(seq, spec.window or seq)
@@ -49,12 +51,27 @@ def _layer_rows(cfg: ArchConfig, *, seq: int) -> list[tuple]:
             w_bytes += 3 * d * cfg.d_ff * _F
         elif spec.ffn == "moe":
             fe = cfg.moe_d_ff or cfg.d_ff
-            flops += 6.0 * d * fe * cfg.moe_top_k + 2.0 * d * cfg.moe_experts
-            w_bytes += 3 * d * fe * cfg.moe_experts * _F
+            # The fused dispatch/combine path computes the expert SwiGLU
+            # over the full (E, C) capacity slabs (empty slots included —
+            # that's what makes the einsum dense/MXU-shaped), so per-token
+            # FFN FLOPs scale with E·C/S ≈ K·cf rounded up to slab
+            # alignment, not bare top-k.
+            E, K = cfg.moe_experts, cfg.moe_top_k
+            C = moe_capacity(seq, E, K, cfg.moe_capacity_factor)
+            slots_per_tok = E * C / seq
+            flops += 6.0 * d * fe * slots_per_tok + 2.0 * d * E
+            w_bytes += 3 * d * fe * E * _F
+            # dispatch writes one activation row per slot and combine
+            # reads K gate-weighted rows back per token — the kernels'
+            # true per-token HBM activation traffic (the K-repeated
+            # source buffer of the old scatter path no longer exists;
+            # combine's own write is the layer output, already counted
+            # in output_bytes)
+            in_bytes += (slots_per_tok + K) * d * _F
         elif spec.ffn == "channel_mix":
             flops += 2.0 * d * cfg.d_ff + 2.0 * cfg.d_ff * d + 2.0 * d * d
             w_bytes += (2 * d * cfg.d_ff + d * d) * _F
-        rows.append((kind, flops, d * _F, w_bytes, d * _F))
+        rows.append((kind, flops, in_bytes, w_bytes, d * _F))
     # LM head — compute-dense matmul over the (padded) vocab
     rows.append(("fc", 2.0 * d * cfg.padded_vocab, d * _F,
                  d * cfg.padded_vocab * _F, 32.0))

@@ -51,16 +51,82 @@ def moe_capacity(num_tokens: int, num_experts: int, top_k: int,
     return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU lane alignment
 
 
-def moe_ffn(p, x, *, top_k: int, capacity_factor: float = 1.25):
+def moe_route(router, x, *, top_k: int, capacity: int):
+    """Top-k capacity routing for ``x (G, S, D)``.
+
+    Returns ``(probs, gate, eid_f, pos, keep)`` where probs: (G, S, E)
+    router softmax; gate: (G, S, K) renormalized top-k weights; and
+    eid_f / pos / keep: (G, S·K) flat per-(token, k) expert id,
+    position-in-expert (exclusive running count within the group) and
+    under-capacity mask.  Shared by the reference oracle, the jnp slot
+    path and the Pallas kernels — the property tests pin its invariants.
+    """
+    G, S, _ = x.shape
+    E = router.shape[1]
+    K = top_k
+
+    logits = (x @ router).astype(jnp.float32)                # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, K)                      # (G, S, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) slot within its expert, per group
+    eid_f = eid.reshape(G, S * K)                            # (G, NK)
+    onehot = jax.nn.one_hot(eid_f, E, dtype=jnp.int32)       # (G, NK, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1                # exclusive rank
+    pos = jnp.take_along_axis(pos_in_e, eid_f[..., None], axis=2)[..., 0]
+    keep = pos < capacity                                    # (G, NK)
+    return probs, gate, eid_f, pos, keep
+
+
+def ref_dispatch(x, eid_f, safe_pos, keep, *, num_experts: int,
+                 capacity: int, top_k: int):
+    """Oracle scatter dispatch: K-repeated source + ``.at[].add`` into
+    the (E, C) capacity slabs.  Single source of truth for the reference
+    path — ``moe_ffn(impl="ref")`` and ``bench_kernels`` both use it."""
+    E, C, K = num_experts, capacity, top_k
+    D = x.shape[-1]
+
+    def dispatch(xg, eg, pg, kg):
+        src = jnp.repeat(xg, K, axis=0) * kg[:, None].astype(xg.dtype)
+        return jnp.zeros((E, C, D), xg.dtype).at[eg, pg].add(src,
+                                                             mode="drop")
+
+    return jax.vmap(dispatch)(x, eid_f, safe_pos, keep)
+
+
+def ref_combine(buf, eid_f, safe_pos, w, *, top_k: int):
+    """Oracle gather combine: explicit (G, N·K, D) gather + gate-weighted
+    sum over k.  ``w (G, N·K)`` is the gate·keep weight."""
+    G, NK = eid_f.shape
+    S, K = NK // top_k, top_k
+    D = buf.shape[-1]
+
+    def combine(og, eg, pg):
+        return og[eg, pg]                                    # (NK, D)
+
+    y_f = jax.vmap(combine)(buf, eid_f, safe_pos)            # (G, NK, D)
+    return (y_f * w[..., None].astype(y_f.dtype)).reshape(G, S, K, D).sum(2)
+
+
+def moe_ffn(p, x, *, top_k: int, capacity_factor: float = 1.25,
+            impl: str = "auto"):
     """x: (B, S, D) → (y (B, S, D), aux) with aux = load-balance loss terms.
 
     GShard-style *grouped* dispatch: each sequence is a routing group
     (G = B groups, shardable over the data axes), with per-group expert
     capacity C = ceil(S·K·cf / E).  Position-in-expert is a cumulative
-    count *within the group* — no cross-shard prefix sum — and the
-    scatter/gather is vmapped over groups, so every step of dispatch is
-    data-parallel while the expert dim lays on the ``model`` axis.
-    Tokens over a group's capacity fall through the residual path.
+    count *within the group* — no cross-shard prefix sum — so every step
+    of dispatch is data-parallel while the expert dim lays on the
+    ``model`` axis.  Tokens over a group's capacity fall through the
+    residual path.
+
+    ``impl="ref"`` is the pure-JAX scatter/gather oracle (K-repeated
+    source, ``.at[].add`` dispatch, explicit gather combine).  Any other
+    impl routes the data movement through the fused dispatch/combine
+    layer in :mod:`repro.kernels.ops` (``auto`` → compiled Pallas on TPU,
+    jnp slot formulation elsewhere; ``interpret``/``slot``/``pallas``
+    force a path), with gradients via the kernels' ``custom_vjp``.
     """
     from repro.parallel.act import shard_batch_act, shard_moe_group_buffer
 
@@ -69,24 +135,20 @@ def moe_ffn(p, x, *, top_k: int, capacity_factor: float = 1.25):
     K = top_k
     C = moe_capacity(S, E, K, capacity_factor)               # per group
 
-    logits = (x @ p["router"]).astype(jnp.float32)           # (G, S, E)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate, eid = jax.lax.top_k(probs, K)                      # (G, S, K)
-    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
-
-    # position of each (token, k) slot within its expert, per group
-    eid_f = eid.reshape(B, S * K)                            # (G, NK)
-    onehot = jax.nn.one_hot(eid_f, E, dtype=jnp.int32)       # (G, NK, E)
-    pos_in_e = jnp.cumsum(onehot, axis=1) - 1                # exclusive rank
-    pos = jnp.take_along_axis(pos_in_e, eid_f[..., None], axis=2)[..., 0]
-    keep = pos < C                                           # (G, NK)
+    probs, gate, eid_f, pos, keep = moe_route(p["router"], x, top_k=K,
+                                              capacity=C)
     safe_pos = jnp.where(keep, pos, 0)
 
-    def dispatch(xg, eg, pg, kg):
-        src = jnp.repeat(xg, K, axis=0) * kg[:, None].astype(xg.dtype)
-        return jnp.zeros((E, C, D), xg.dtype).at[eg, pg].add(src, mode="drop")
+    if impl == "ref":
+        buf = ref_dispatch(x, eid_f, safe_pos, keep, num_experts=E,
+                           capacity=C, top_k=K)              # (G, E, C, D)
+    else:
+        from repro.kernels import ops as kops
 
-    buf = jax.vmap(dispatch)(x, eid_f, safe_pos, keep)       # (G, E, C, D)
+        buf = kops.moe_dispatch(x, eid_f, pos,
+                                keep.astype(jnp.float32),
+                                num_experts=E, capacity=C, top_k=K,
+                                impl=impl)
     buf = shard_moe_group_buffer(buf)
 
     # batched expert SwiGLU — the expert dim shards over the model axis
@@ -95,15 +157,18 @@ def moe_ffn(p, x, *, top_k: int, capacity_factor: float = 1.25):
     out = jnp.einsum("gecf,efd->gecd", h, p["w2"])           # (G, E, C, D)
     out = shard_moe_group_buffer(out)
 
-    def combine(og, eg, pg):
-        return og[eg, pg]                                    # (NK, D)
-
-    y_f = jax.vmap(combine)(out, eid_f, safe_pos)            # (G, NK, D)
     w = (gate.reshape(B, S * K) * keep).astype(x.dtype)
-    y = (y_f * w[..., None]).reshape(B, S, K, D).sum(2)
+    if impl == "ref":
+        y = ref_combine(out, eid_f, safe_pos, w, top_k=K)
+    else:
+        y = kops.moe_combine(
+            out, eid_f.reshape(B, S, K), safe_pos.reshape(B, S, K),
+            w.reshape(B, S, K), impl=impl,
+        )
     y = shard_batch_act(y)
 
     # Switch-style load-balance aux loss
+    eid = eid_f.reshape(B, S, K)
     density = jax.nn.one_hot(eid[..., 0], E).mean((0, 1))    # top-1 share
     mean_prob = probs.mean((0, 1))
     aux = E * jnp.sum(density * mean_prob)

@@ -197,6 +197,88 @@ class TestMoe:
         assert np.isfinite(float(aux["aux_loss"]))
         assert np.isfinite(np.asarray(y)).all()
 
+    def test_impl_paths_agree(self):
+        """Default (auto→slot on CPU) and ref oracle produce one answer."""
+        D, F, E = 16, 32, 4
+        p = moe_mod.init_moe(KEY, D, F, E)
+        x = jax.random.normal(KEY, (2, 24, D))
+        y_auto, _ = moe_mod.moe_ffn(p, x, top_k=2)
+        y_ref, _ = moe_mod.moe_ffn(p, x, top_k=2, impl="ref")
+        np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_ref),
+                                   atol=1e-5)
+
+
+class TestMoeRouting:
+    """Property tests for the routing invariants of moe_route (the
+    pure-JAX reference shared by oracle and kernel paths)."""
+
+    def _route(self, S, K, cf, seed=0):
+        D, E = 8, 4
+        key = jax.random.fold_in(KEY, seed)
+        p = moe_mod.init_moe(key, D, 16, E)
+        x = jax.random.normal(key, (2, S, D))
+        C = moe_mod.moe_capacity(S, E, K, cf)
+        probs, gate, eid_f, pos, keep = moe_mod.moe_route(
+            p["router"], x, top_k=K, capacity=C)
+        return E, C, probs, gate, eid_f, pos, keep
+
+    @given(st.integers(4, 40), st.integers(1, 4), st.sampled_from(
+        [0.25, 0.5, 1.0, 1.25, 4.0]))
+    @settings(max_examples=15, deadline=None)
+    def test_routing_invariants(self, S, K, cf):
+        E, C, probs, gate, eid_f, pos, keep = self._route(S, K, cf,
+                                                          seed=S * 16 + K)
+        eid_np = np.asarray(eid_f)
+        pos_np = np.asarray(pos)
+        keep_np = np.asarray(keep)
+        G, NK = eid_np.shape
+        assert NK == S * K
+        # gates: renormalized over k, each in (0, 1]
+        g_np = np.asarray(gate)
+        np.testing.assert_allclose(g_np.sum(-1), 1.0, atol=1e-5)
+        assert (g_np > 0).all()
+        for g in range(G):
+            for e in range(E):
+                sel = eid_np[g] == e
+                # kept slots of expert e occupy distinct positions 0..<C
+                kept_pos = pos_np[g][sel & keep_np[g]]
+                assert len(set(kept_pos.tolist())) == len(kept_pos)
+                assert (kept_pos < C).all() and (kept_pos >= 0).all()
+                # occupancy == min(routed, C): first-come-first-kept
+                assert len(kept_pos) == min(int(sel.sum()), C)
+            # per-token: the K expert choices are distinct (top-k)
+            per_tok = eid_np[g].reshape(S, K)
+            for s in range(S):
+                assert len(set(per_tok[s].tolist())) == K
+        # drop accounting matches moe_capacity arithmetic exactly
+        overflow = sum(
+            max(0, int((eid_np[g] == e).sum()) - C)
+            for g in range(G) for e in range(E)
+        )
+        assert int((~keep_np).sum()) == overflow
+
+    @given(st.integers(1, 4))
+    @settings(max_examples=4, deadline=None)
+    def test_reconstruction_when_undropped(self, K):
+        """combine∘dispatch on an un-dropped batch reconstructs the
+        top-k gate-weighted mix: with identity experts, y == x."""
+        from repro.kernels import moe as moe_k
+
+        D, E, S = 8, 4, 12
+        key = jax.random.fold_in(KEY, 7 + K)
+        p = moe_mod.init_moe(key, D, 16, E)
+        x = jax.random.normal(key, (2, S, D))
+        C = moe_mod.moe_capacity(S, E, K, 8.0)   # capacity ≥ all tokens
+        _, gate, eid_f, pos, keep = moe_mod.moe_route(p["router"], x,
+                                                      top_k=K, capacity=C)
+        assert bool(jnp.all(keep))
+        buf = moe_k.moe_dispatch(x, eid_f, pos, keep.astype(jnp.float32),
+                                 E, C, K, "slot")
+        y = moe_k.moe_combine(buf, eid_f.reshape(2, S, K),
+                              pos.reshape(2, S, K),
+                              gate.reshape(2, S, K), "slot")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-5)
+
 
 class TestBase:
     def test_softcap_bounds(self):

@@ -48,7 +48,12 @@ class TestSchedulerOnAssignedArchs:
         fleet = make_fleet(3)
         job = TrainingJob(throughput_limit=2000.0, num_examples=50_000_000)
         profiles = profile_arch(arch, fleet)
-        r = RLScheduler(rounds=15, seed=0).schedule(profiles, fleet, job)
+        # 30 rounds: the capacity-slab MoE cost accounting (PR 4 — FFN
+        # FLOPs ∝ E·C/S, the slabs the fused kernel really computes)
+        # shrinks jamba's feasible set enough that a 15-round search
+        # misses it at this seed; feasible plans still exist and the
+        # assertions are unchanged.
+        r = RLScheduler(rounds=30, seed=0).schedule(profiles, fleet, job)
         assert r.plan.num_layers == len(profiles)
         assert math.isfinite(r.cost)
 

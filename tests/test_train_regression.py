@@ -1,0 +1,50 @@
+"""Fast training-dynamics regression tests (default suite).
+
+Guards the OLMoE training plateau (ROADMAP, fixed in PR 4): with
+i.i.d. *uniform* synthetic tokens the CE floor is ``log V`` and the only
+achievable descent — flattening the initial logit variance — is smaller
+than batch noise for the untied-head MoE arch, so training looked flat.
+``SyntheticTokenDataset`` now draws Zipfian unigram tokens (learnable
+marginal, H ≪ log V); these tests pin that the loss actually descends,
+at a scale small enough for the default (tier-1) suite, so the plateau
+cannot silently return while the full 20-step check lives in the slow
+suite (``test_system.py::test_moe_arch_trains``).
+"""
+
+import numpy as np
+
+from repro.launch.train import train
+
+
+class TestLossDescends:
+    def test_moe_loss_drops_fast(self):
+        """Reduced OLMoE: ≥10% loss drop within 12 steps, deterministic
+        seed — the plateau regression proper."""
+        s = train("olmoe-1b-7b", reduced=True, steps=12, batch=4, seq=32,
+                  log_every=0)
+        assert s["loss_decreased"], s
+        assert s["last_loss"] < 0.9 * s["first_loss"], s
+
+    def test_moe_loss_drops_with_ref_impl(self):
+        """The plateau fix is about data/dynamics, not the new kernel
+        path: the pure-JAX oracle MoE must descend identically."""
+        import dataclasses
+
+        from repro.configs import get_config
+        cfg = dataclasses.replace(get_config("olmoe-1b-7b", reduced=True),
+                                  moe_impl="ref")
+        s = train(cfg, reduced=True, steps=12, batch=4, seq=32, log_every=0)
+        assert s["last_loss"] < 0.9 * s["first_loss"], s
+
+    def test_synthetic_data_has_learnable_skew(self):
+        """The dataset's unigram entropy must sit well below log V —
+        that's the headroom the regression tests rely on."""
+        from repro.data import SyntheticTokenDataset
+
+        ds = SyntheticTokenDataset(1024, 4, 64, seed=0)
+        toks = np.concatenate([ds.batch(i)["tokens"].ravel()
+                               for i in range(8)])
+        counts = np.bincount(toks, minlength=1024).astype(np.float64)
+        p = counts / counts.sum()
+        ent = -(p[p > 0] * np.log(p[p > 0])).sum()
+        assert ent < 0.8 * np.log(1024), ent
