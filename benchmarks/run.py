@@ -22,6 +22,7 @@ SUITES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("kernels", "benchmarks.bench_kernels"),
     ("ps", "benchmarks.bench_ps"),
+    ("serve", "benchmarks.bench_serve"),
 ]
 
 

@@ -1,8 +1,9 @@
-"""Batched serving example: prefill + KV-cache decode on assigned archs.
+"""Batched serving example: batched prefill + fused KV-cache decode.
 
-Exercises the three cache families: full attention KV (llama3.2-1b),
-sliding-window ring buffer (gemma2-2b), and recurrent state (rwkv6-7b) —
-the long-context decode story of DESIGN.md.
+Exercises the three cache families — full attention KV (llama3.2-1b),
+sliding-window ring buffer (gemma2-2b), recurrent state (rwkv6-7b,
+jamba-v0.1-52b) — then the paged KV cache and the continuous-batching
+loop (admit/evict against the shared page pool) on llama3.2-1b.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -11,7 +12,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.launch.serve import serve
+from repro.launch.serve import serve, serve_continuous
 
 
 def main() -> None:
@@ -20,6 +21,20 @@ def main() -> None:
         print(f"{arch:20s} gen={out['generated_shape']} "
               f"vocab-valid={out['tokens_in_vocab']} "
               f"decode {out['decode_tok_per_s']:7.1f} tok/s")
+
+    out = serve("llama3.2-1b", reduced=True, batch=4, prompt_len=16, gen=16,
+                kv_impl="paged", page_size=8)
+    print(f"{'llama3.2-1b/paged':20s} gen={out['generated_shape']} "
+          f"decode {out['decode_tok_per_s']:7.1f} tok/s "
+          f"kv {out['kv_bytes_per_token']:.0f} B/tok")
+
+    out = serve_continuous("llama3.2-1b", slots=4, page_size=8,
+                           decode_chunk=4)
+    ratio = out["kv_bytes_per_token_paged"] / out["kv_bytes_per_token_dense"]
+    print(f"{'continuous batching':20s} requests={out['requests']} "
+          f"gen={out['generated']} decode {out['decode_tok_per_s']:5.1f} "
+          f"tok/s kv-bytes ratio paged/dense={ratio:.3f} "
+          f"pool-conserved={out['pool_conserved']}")
 
 
 if __name__ == "__main__":

@@ -65,7 +65,7 @@ def _adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
 
 # --- fused search kernel -----------------------------------------------------
 
-_STATIC = ("cell", "num_types", "optimizer", "plans")
+_STATIC = ("cell", "num_types", "optimizer", "plans", "early_stop")
 
 
 @partial(jax.jit, static_argnames=("c",))
@@ -81,17 +81,21 @@ def _round_keys(key, c: int):
 
 
 def _chunk_scan(carry, rks, feats, mask, ct, lr, gamma, temperature,
-                *, cell, num_types, optimizer, plans):
+                *, cell, num_types, optimizer, plans, early_stop):
     """``C = len(rks)`` fused REINFORCE rounds for one model.
 
     One round = sample ``plans`` plans → soft cost on device → advantage →
     REINFORCE gradient → optimizer step.  Stacks per-round (params,
-    actions, soft, feasible) so the host can harvest history, back-fill
-    the cost cache, and replay the early-stop decision exactly.
+    actions, soft, feasible, stop) so the host can harvest history and
+    back-fill the cost cache; the early-stop bookkeeping (best cost /
+    rounds-since-improvement) lives in the scan carry, so ``stop`` is a
+    device-computed flag the host only *reads* between chunks — once
+    every member of a vmapped group has flagged, the remaining chunks
+    are skipped entirely.
     """
 
     def body(c, _ks):
-        params, opt, b, binit = c
+        params, opt, b, binit, best, since = c
         keys = jax.random.split(_ks, plans)
 
         # one forward pass both samples the plans and records the vjp of
@@ -118,7 +122,15 @@ def _chunk_scan(carry, rks, feats, mask, ct, lr, gamma, temperature,
         else:
             params = jax.tree.map(lambda p, g: p + lr * g, params, grads)
         b = (1 - gamma) * b + gamma * rmean         # Line 8
-        return (params, opt, b, binit), (params, actions, sc.soft, sc.feasible)
+        # early-stop counter on device (same math the host loop used to
+        # replay: strict improvement beyond 1e-12 resets the clock)
+        round_best = jnp.min(sc.soft)
+        improved = round_best < best - 1e-12
+        since = jnp.where(improved, 0, since + 1)
+        best = jnp.where(improved, round_best, best)
+        stop = since >= early_stop
+        return (params, opt, b, binit, best, since), (
+            params, actions, sc.soft, sc.feasible, stop)
 
     return jax.lax.scan(body, carry, rks)
 
@@ -128,11 +140,11 @@ _chunk_single = partial(jax.jit, static_argnames=_STATIC)(_chunk_scan)
 
 @partial(jax.jit, static_argnames=_STATIC)
 def _chunk_multi(carry, rks, feats, mask, ct, lr, gamma, temperature,
-                 *, cell, num_types, optimizer, plans):
+                 *, cell, num_types, optimizer, plans, early_stop):
     """vmap of :func:`_chunk_scan` across models; the round-key stream is
     shared (each model sees the same keys a solo run with this seed would)."""
     f = partial(_chunk_scan, cell=cell, num_types=num_types,
-                optimizer=optimizer, plans=plans)
+                optimizer=optimizer, plans=plans, early_stop=early_stop)
     return jax.vmap(f, in_axes=(0, None, 0, 0, 0, None, None, None))(
         carry, rks, feats, mask, ct, lr, gamma, temperature
     )
@@ -291,8 +303,6 @@ class RLScheduler(Scheduler):
 
         C = max(1, min(self.chunk_rounds, self.rounds))
         histories = [[] for _ in range(M)]
-        best_cost = [float("inf")] * M
-        best_since = [0] * M
         stopped = [False] * M
         greedy_params = [None] * M  # per-model params at its final round
         chunk_times: list[float] = []
@@ -319,7 +329,11 @@ class RLScheduler(Scheduler):
             )
             b = stack(jnp.zeros(()))
             binit = stack(jnp.zeros((), bool))
-            carry = (params, opt_state, b, binit)
+            # device-side early-stop state: best soft cost so far + rounds
+            # since the last improvement (the scan emits the stop flag)
+            best = stack(jnp.full((), jnp.inf))
+            since = stack(jnp.int32(0))
+            carry = (params, opt_state, b, binit, best, since)
 
             rounds_done = 0
             # every chunk runs the full static length C — a shorter final
@@ -329,19 +343,22 @@ class RLScheduler(Scheduler):
             while rounds_done < self.rounds and not all(stopped):
                 key, rks = _round_keys(key, C)
                 t0 = time.perf_counter()
-                carry, (pstack, acts, softs, feas) = chunk_fn(
+                carry, (pstack, acts, softs, feas, stops) = chunk_fn(
                     carry, rks, feats_a, mask_a, ct,
                     self.lr, self.gamma, self.temperature,
                     cell=self.cell, num_types=T, optimizer=self.optimizer,
                     plans=self.plans_per_round,
+                    early_stop=self.early_stop_rounds,
                 )
                 jax.block_until_ready(softs)
                 acts_h = np.asarray(acts)
                 softs_h = np.asarray(softs)
                 feas_h = np.asarray(feas)
+                stops_h = np.asarray(stops)
                 if M == 1:  # normalize to a leading model axis
-                    acts_h, softs_h, feas_h = (
-                        acts_h[None], softs_h[None], feas_h[None])
+                    acts_h, softs_h, feas_h, stops_h = (
+                        acts_h[None], softs_h[None], feas_h[None],
+                        stops_h[None])
 
                 last_round = min(rounds_done + C, self.rounds) - 1
                 for m in range(M):
@@ -356,13 +373,11 @@ class RLScheduler(Scheduler):
                             acts_h[m, c, :, : num_layers[m]],
                             softs_h[m, c], feas_h[m, c],
                         )
-                        round_best = float(softs_h[m, c].min())
-                        histories[m].append(round_best)
-                        if round_best < best_cost[m] - 1e-12:
-                            best_cost[m], best_since[m] = round_best, 0
-                        else:
-                            best_since[m] += 1
-                        if best_since[m] >= self.early_stop_rounds:
+                        histories[m].append(float(softs_h[m, c].min()))
+                        # device-computed stop flag: once every group
+                        # member has flagged, the while-loop skips the
+                        # remaining chunks for this group entirely
+                        if stops_h[m, c]:
                             stopped[m], final_c = True, c
                             break
                     # params after this model's final executed round — the

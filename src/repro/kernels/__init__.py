@@ -5,6 +5,9 @@ from repro.kernels.ops import (
     flash_attention,
     moe_combine,
     moe_dispatch,
+    paged_attention_decode,
 )
+from repro.kernels.paged_attention import PagePool
 
-__all__ = ["embedding_bag", "flash_attention", "moe_combine", "moe_dispatch"]
+__all__ = ["embedding_bag", "flash_attention", "moe_combine", "moe_dispatch",
+           "paged_attention_decode", "PagePool"]

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels import moe as moe_kernels
+from repro.kernels import paged_attention as paged_k
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag_kernel
 from repro.kernels.flash_attention import (
     DEFAULT_BLOCK_K,
@@ -71,6 +72,33 @@ def _moe_impl(impl: str) -> str:
             "pallas (the scatter/gather oracle is nn.moe.moe_ffn's "
             "impl='ref', not a kernels-layer path)")
     return impl
+
+
+def paged_attention_decode(q, k_pages, v_pages, page_table, q_pos, *,
+                           window: int | None = None,
+                           softcap: float | None = None,
+                           impl: str = "auto"):
+    """Paged one-token decode attention.  q: (B, KV, G, hd) grouped
+    queries; k/v_pages: (num_pages, page_size, KV, hd); page_table:
+    (B, P) int32; q_pos: (B,) int32.  Returns (B, KV, G, hd).
+
+    ``auto`` compiles the Pallas kernel on TPU and runs the jnp
+    gather-over-pages formulation elsewhere; ``interpret`` executes the
+    kernel body in the Pallas interpreter.  The dense ring-buffer oracle
+    is ``nn.attention.decode_attention`` (``ArchConfig.kv_impl="dense"``),
+    not a kernels-layer path.
+    """
+    if impl == "gather" or (impl == "auto" and not _on_tpu()):
+        return paged_k.paged_decode_gather(q, k_pages, v_pages, page_table,
+                                           q_pos, window=window,
+                                           softcap=softcap)
+    if impl not in ("auto", "interpret", "pallas"):
+        raise ValueError(
+            f"unknown paged-attention impl {impl!r}: expected "
+            "auto/gather/interpret/pallas")
+    return paged_k.paged_decode_pallas(q, k_pages, v_pages, page_table,
+                                       q_pos, window=window, softcap=softcap,
+                                       interpret=impl == "interpret")
 
 
 def moe_dispatch(x, eid, pos, wtok, *, num_experts: int, capacity: int,

@@ -1,60 +1,263 @@
-"""Serving launcher: batched prefill + token-by-token decode with KV cache.
+"""Serving launcher: batched prefill + continuous-batching KV-cache decode.
+
+Two entry points:
+
+* :func:`serve` — fixed-batch generation: ONE forward pass prefills the
+  whole prompt into the decode cache, then a jitted ``lax.scan`` decode
+  loop generates tokens in chunks that are harvested on device (a single
+  host transfer per chunk, not a jit dispatch + ``np.asarray`` sync per
+  token).  ``kv_impl="paged"`` swaps the dense ring buffers for the
+  shared page pool of ``kernels/paged_attention.py``.
+
+* :func:`serve_continuous` — continuous batching over variable-length
+  requests: sequences are admitted into batch slots against a host
+  :class:`~repro.kernels.PagePool` (per-admission exact-length prefill),
+  decoded together in jitted multi-token chunks, and evicted when done so
+  their pages recycle into the pool for the next request.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \\
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 [--kv-impl paged] [--continuous]
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.kernels.paged_attention import PagePool
 from repro.models import decoder as dec
+from repro.models.profile import kv_read_bytes_per_token
 
 
 def serve(arch: str, *, reduced: bool = True, batch: int = 4,
           prompt_len: int = 32, gen: int = 16, cache_len: int = 128,
-          seed: int = 0, compute_dtype=jnp.float32, greedy: bool = True) -> dict:
+          seed: int = 0, compute_dtype=jnp.float32, kv_impl: str = "dense",
+          page_size: int = 16, decode_chunk: int | None = None) -> dict:
+    """Fixed-batch serve: batched prefill + chunked on-device decode."""
     cfg = get_config(arch, reduced=reduced)
+    if cfg.kv_impl != kv_impl:
+        cfg = dataclasses.replace(cfg, kv_impl=kv_impl)
+    if kv_impl == "paged" and prompt_len + gen > cache_len:
+        # the page pool does not ring-wrap: positions past capacity would
+        # be silently dropped (the dense ring keeps a sliding window)
+        raise ValueError(
+            f"paged serve needs prompt_len+gen <= cache_len "
+            f"({prompt_len}+{gen} > {cache_len})")
     key = jax.random.PRNGKey(seed)
     params = dec.init_model(cfg, key)
     prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)
-    ctx = None
-    if cfg.cross_kv_len:
-        n = cfg.encoder.frames if cfg.encoder else cfg.cross_kv_len
-        ctx = jax.random.normal(key, (batch, n, cfg.d_model))
 
-    cache = dec.init_cache(cfg, batch, cache_len, dtype=compute_dtype)
-    step = jax.jit(
-        lambda p, t, c, i: dec.decode_step(p, cfg, t, c, i,
-                                           compute_dtype=compute_dtype)
+    cache = dec.init_cache(cfg, batch, cache_len, dtype=compute_dtype,
+                           page_size=page_size)
+    prefill_jit = jax.jit(
+        lambda p, t, c: dec.prefill(p, cfg, t, c, compute_dtype=compute_dtype)
     )
-    # prefill by stepping the prompt (teacher-forced decode steps)
+    # prefill: ONE forward fills the cache (vs stepping the prompt
+    # token-by-token through the decode path)
     t0 = time.time()
-    for i in range(prompt_len):
-        logits, cache = step(params, prompts[:, i : i + 1], cache, jnp.int32(i))
+    logits, cache = prefill_jit(params, prompts, cache)
+    jax.block_until_ready(logits)
     prefill_s = time.time() - t0
 
-    generated = []
-    tok = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    chunk = min(decode_chunk or gen, gen)
+    loop_jit = jax.jit(
+        lambda p, t, c, i: dec.decode_loop(p, cfg, t, c, i, chunk,
+                                           compute_dtype=compute_dtype)
+    )
+    # warm the scan program (functional: the discarded chunk leaves tok /
+    # cache untouched) so decode_s measures steady-state throughput
     t0 = time.time()
-    for i in range(gen):
-        generated.append(np.asarray(tok)[:, 0])
-        logits, cache = step(params, tok, cache, jnp.int32(prompt_len + i))
-        tok = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    jax.block_until_ready(
+        loop_jit(params, tok, cache, jnp.int32(prompt_len))[0])
+    compile_s = time.time() - t0
+    outs = []
+    t0 = time.time()
+    done, idx = 0, prompt_len
+    while done < gen:
+        toks, tok, cache = loop_jit(params, tok, cache, jnp.int32(idx))
+        outs.append(np.asarray(toks))       # one transfer per chunk
+        done += chunk
+        idx += chunk
     decode_s = time.time() - t0
-    out = np.stack(generated, axis=1)
+    out = np.concatenate(outs, axis=1)[:, :gen]
+
+    el = np.dtype(compute_dtype).itemsize
     return {
         "arch": cfg.name, "batch": batch, "generated_shape": list(out.shape),
+        "tokens": out.tolist(),
         "tokens_in_vocab": bool((out >= 0).all() and (out < cfg.vocab).all()),
         "prefill_s": prefill_s, "decode_s": decode_s,
+        "decode_compile_s": compile_s,
         "decode_tok_per_s": batch * gen / max(decode_s, 1e-9),
+        "kv_impl": kv_impl,
+        "kv_bytes_per_token": kv_read_bytes_per_token(
+            cfg, prompt_len + gen, cache_len=cache_len,
+            page_size=page_size if kv_impl == "paged" else None,
+            bytes_per_el=el),
+    }
+
+
+def _default_requests(n: int = 12) -> list[tuple[int, int]]:
+    """Deterministic skewed mix of (prompt_len, gen_len) requests."""
+    return [(8 + (7 * i) % 25, 6 + (5 * i) % 15) for i in range(n)]
+
+
+def serve_continuous(arch: str, *, reduced: bool = True,
+                     requests: list[tuple[int, int]] | None = None,
+                     slots: int = 4, page_size: int = 16,
+                     num_pages: int | None = None,
+                     max_seq_len: int | None = None, decode_chunk: int = 8,
+                     seed: int = 0, compute_dtype=jnp.float32) -> dict:
+    """Continuous-batching serve over variable-length requests.
+
+    Each request ``(prompt_len, gen_len)`` is admitted into a free batch
+    slot when the :class:`PagePool` can reserve its pages (prompt + gen +
+    one decode chunk of slack), prefilled at its EXACT length (one
+    forward, no padding — correct for recurrent mixers too; prefill
+    recompiles once per distinct prompt length), then decoded with every
+    other live slot in jitted ``decode_chunk``-token chunks harvested on
+    device.  Finished sequences are evicted and their pages recycle.
+
+    ``num_pages`` below full slot coverage oversubscribes the pool:
+    admission blocks until evictions free enough pages.
+    """
+    cfg = dataclasses.replace(get_config(arch, reduced=reduced),
+                              kv_impl="paged")
+    key = jax.random.PRNGKey(seed)
+    params = dec.init_model(cfg, key)
+    if requests is None:
+        requests = _default_requests()
+    if max_seq_len is None:
+        max_seq_len = max(p + g for p, g in requests) + decode_chunk
+    pages_per_seq = -(-max_seq_len // page_size)
+    if num_pages is None:
+        num_pages = 1 + slots * pages_per_seq
+    pool = PagePool(num_pages, page_size, slots, pages_per_seq)
+    cache = dec.init_cache(cfg, slots, pages_per_seq * page_size,
+                           dtype=compute_dtype, page_size=page_size,
+                           num_pages=num_pages)
+    cache["page_table"] = jnp.asarray(pool.table)
+
+    prefill_jit = jax.jit(
+        lambda p, t, c: dec.prefill(p, cfg, t, c, compute_dtype=compute_dtype)
+    )
+    loop_jit = jax.jit(
+        lambda p, t, c: dec.decode_loop(p, cfg, t, c, 0, decode_chunk,
+                                        compute_dtype=compute_dtype)
+    )
+
+    queue = deque(enumerate(requests))
+    slot_req: list[list | None] = [None] * slots   # [rid, gen_remaining]
+    cur_tok = np.zeros((slots, 1), np.int32)
+    lengths = np.zeros(slots, np.int32)
+    active = np.zeros(slots, bool)
+    outputs: list[list[int]] = [[] for _ in requests]
+    el = np.dtype(compute_dtype).itemsize
+    dense_equiv_len = pages_per_seq * page_size
+    kv_spans: list[tuple[int, int]] = []   # (start_len, n_tokens) per slot
+    toks_done = 0
+    prefills = 0
+    peak_pages = 0
+
+    def admit():
+        nonlocal cache, prefills
+        for s in range(slots):
+            if slot_req[s] is not None or not queue:
+                continue
+            rid, (plen, g) = queue[0]
+            need = plen + g + decode_chunk
+            if not pool.can_admit(need):
+                if pool.pages_for(need) > pool.pages_per_seq:
+                    raise RuntimeError(
+                        f"request {rid} needs {pool.pages_for(need)} pages "
+                        f"> pages_per_seq={pool.pages_per_seq} (raise "
+                        f"max_seq_len)")
+                if not any(active):
+                    raise RuntimeError(
+                        f"request {rid} needs {pool.pages_for(need)} pages; "
+                        f"pool has {num_pages - 1} total")
+                break                       # wait for an eviction
+            queue.popleft()
+            pool.admit(s, need)
+            cache = {**cache, "page_table": jnp.asarray(pool.table)}
+            prompt = jax.random.randint(jax.random.fold_in(key, 1000 + rid),
+                                        (1, plen), 0, cfg.vocab)
+            sub = dec.slot_cache(cache, s)
+            sub = {**sub, "length": jnp.zeros((1,), jnp.int32)}
+            lg, sub = prefill_jit(params, prompt, sub)
+            prefills += 1
+            cache = dec.merge_slot_cache(cache, sub, s)
+            cur_tok[s, 0] = int(np.argmax(np.asarray(
+                lg[0, plen - 1, : cfg.vocab])))
+            lengths[s] = plen
+            active[s] = True
+            slot_req[s] = [rid, g]
+
+    t0 = time.time()
+    admit()
+    while any(active):
+        peak_pages = max(peak_pages, (num_pages - 1) - pool.free_pages)
+        cache = {**cache,
+                 "page_table": jnp.asarray(pool.table),
+                 "active": jnp.asarray(active),
+                 "length": jnp.asarray(lengths)}
+        toks, ntok, cache = loop_jit(params, jnp.asarray(cur_tok), cache)
+        toks_h = np.asarray(toks)           # one transfer per chunk
+        cur_tok = np.array(ntok)            # writable: admit() refills slots
+        for s in range(slots):
+            if slot_req[s] is None:
+                continue
+            rid, rem = slot_req[s]
+            take = min(rem, decode_chunk)
+            outputs[rid].extend(int(t) for t in toks_h[s, :take])
+            # byte accounting happens after the timer stops — only the
+            # (start_length, tokens) span is recorded in the hot loop
+            kv_spans.append((int(lengths[s]), take))
+            toks_done += take
+            lengths[s] += decode_chunk      # mirrors the device increment
+            slot_req[s][1] = rem - decode_chunk
+            if slot_req[s][1] <= 0:
+                pool.evict(s)               # pages recycle into the pool
+                slot_req[s] = None
+                active[s] = False
+                lengths[s] = 0
+        admit()
+    wall = time.time() - t0
+
+    kv_bytes = sum(
+        kv_read_bytes_per_token(cfg, start + i + 1,
+                                cache_len=dense_equiv_len,
+                                page_size=page_size, bytes_per_el=el)
+        for start, n in kv_spans for i in range(n)
+    )
+    dense_bpt = kv_read_bytes_per_token(cfg, dense_equiv_len,
+                                        cache_len=dense_equiv_len,
+                                        page_size=None, bytes_per_el=el)
+    ok = all(
+        len(o) == g and all(0 <= t < cfg.vocab for t in o)
+        for (_, g), o in zip(requests, outputs)
+    )
+    return {
+        "arch": cfg.name, "requests": len(requests), "slots": slots,
+        "page_size": page_size, "num_pages": num_pages,
+        "generated": [len(o) for o in outputs],
+        "tokens": outputs,
+        "tokens_in_vocab": ok,
+        "decode_tok_per_s": toks_done / max(wall, 1e-9),
+        "prefills": prefills, "wall_s": wall,
+        "kv_bytes_per_token_paged": kv_bytes / max(toks_done, 1),
+        "kv_bytes_per_token_dense": dense_bpt,
+        "peak_pages_in_use": peak_pages,
+        "pool_conserved": pool.free_pages == num_pages - 1,
     }
 
 
@@ -65,9 +268,19 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kv-impl", choices=("dense", "paged"), default="dense")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching loop over a skewed request "
+                         "mix (always paged)")
     args = ap.parse_args()
-    print(json.dumps(serve(args.arch, reduced=args.reduced, batch=args.batch,
-                           prompt_len=args.prompt_len, gen=args.gen), indent=2))
+    if args.continuous:
+        out = serve_continuous(args.arch, reduced=args.reduced,
+                               slots=args.batch)
+    else:
+        out = serve(args.arch, reduced=args.reduced, batch=args.batch,
+                    prompt_len=args.prompt_len, gen=args.gen,
+                    kv_impl=args.kv_impl)
+    print(json.dumps(out, indent=2))
 
 
 if __name__ == "__main__":

@@ -2,14 +2,16 @@
 
 from repro.models.config import ArchConfig, EncoderConfig, LayerSpec
 from repro.models.decoder import (
+    decode_loop,
     decode_step,
     forward,
     init_cache,
     init_model,
     loss_fn,
+    prefill,
 )
 
 __all__ = [
-    "ArchConfig", "EncoderConfig", "LayerSpec", "decode_step", "forward",
-    "init_cache", "init_model", "loss_fn",
+    "ArchConfig", "EncoderConfig", "LayerSpec", "decode_loop", "decode_step",
+    "forward", "init_cache", "init_model", "loss_fn", "prefill",
 ]

@@ -59,6 +59,12 @@ class ArchConfig:
     #: scatter/gather oracle; "interpret"/"slot"/"pallas" force a path
     #: (see repro/kernels/moe.py)
     moe_impl: str = "auto"
+    #: decode KV-cache layout: "dense" = per-sequence ring buffers (the
+    #: reference oracle); "paged" = shared page pool + per-sequence page
+    #: tables (kernels/paged_attention.py) — within the paged path the
+    #: kernel impl resolves via kernels/ops.py impl="auto" (Pallas on
+    #: TPU, jnp gather-over-pages elsewhere)
+    kv_impl: str = "dense"
     # positions
     rope_theta: float = 10000.0
     pos_embed: Literal["rope", "learned", "none"] = "rope"

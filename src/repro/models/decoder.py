@@ -23,6 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import paged_attention as paged_k
 from repro.models.config import ArchConfig, LayerSpec
 from repro.parallel import act
 from repro.nn import attention as attn_mod
@@ -148,6 +149,38 @@ def _cast(p, dtype):
     )
 
 
+def _ffn_block(cfg, spec: LayerSpec, p, x, *, mode: str = "seq", cache=None):
+    """norm2 → ffn → (post-norm) → residual — shared by the train,
+    prefill and decode layer bodies.  ``mode``: "seq" (train/forward),
+    "prefill" (also emits the rwkv channel-mix shift state), "decode"
+    (steps the channel-mix against ``cache``).  Returns
+    (x, moe_aux, cache_update)."""
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "none":
+        return x, aux, {}
+    upd: dict[str, Any] = {}
+    h = _norm(cfg, p["norm2"], x)
+    if spec.ffn == "dense":
+        y = moe_mod.dense_ffn(p["ffn"], h)
+    elif spec.ffn == "moe":
+        y, moe_aux = moe_mod.moe_ffn(p["ffn"], h, top_k=cfg.moe_top_k,
+                                     capacity_factor=cfg.moe_capacity_factor,
+                                     impl=cfg.moe_impl)
+        aux = aux + moe_aux["aux_loss"]
+    elif spec.ffn == "channel_mix":
+        if mode == "decode":
+            y, upd = rwkv_mod.decode_channel_mix(p["ffn"], h, cache)
+        else:
+            y = rwkv_mod.channel_mix_seq(p["ffn"], h)
+            if mode == "prefill":
+                upd = {"cm_shift": h[:, -1].astype(jnp.float32)}
+    else:
+        raise ValueError(spec.ffn)
+    if spec.post_norm:
+        y = _norm(cfg, p["norm_post2"], y)
+    return x + y, aux, upd
+
+
 def _apply_layer(cfg, spec: LayerSpec, p, x, *, positions, cross_kv=None,
                  causal=True):
     """One layer forward. Returns (x, moe_aux)."""
@@ -188,24 +221,8 @@ def _apply_layer(cfg, spec: LayerSpec, p, x, *, positions, cross_kv=None,
     if spec.post_norm and spec.mixer != "attn+cross":
         y = _norm(cfg, p["norm_post1"], y)
     x = x + y
-
-    if spec.ffn == "none":
-        return x, aux
-    h = _norm(cfg, p["norm2"], x)
-    if spec.ffn == "dense":
-        y = moe_mod.dense_ffn(p["ffn"], h)
-    elif spec.ffn == "moe":
-        y, moe_aux = moe_mod.moe_ffn(p["ffn"], h, top_k=cfg.moe_top_k,
-                                     capacity_factor=cfg.moe_capacity_factor,
-                                     impl=cfg.moe_impl)
-        aux = aux + moe_aux["aux_loss"]
-    elif spec.ffn == "channel_mix":
-        y = rwkv_mod.channel_mix_seq(p["ffn"], h)
-    else:
-        raise ValueError(spec.ffn)
-    if spec.post_norm:
-        y = _norm(cfg, p["norm_post2"], y)
-    return x + y, aux
+    x, ffn_aux, _ = _ffn_block(cfg, spec, p, x, mode="seq")
+    return x, aux + ffn_aux
 
 
 def _run_blocks(params, cfg: ArchConfig, x, *, positions, cross_kv=None,
@@ -344,16 +361,21 @@ def loss_fn(params, cfg: ArchConfig, batch, *, compute_dtype=jnp.bfloat16,
 
 
 def _layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, cache_len: int,
-                 dtype):
+                 dtype, *, paged_pool: tuple[int, int] | None = None):
     kv = dict(
         n_kv=cfg.n_kv_heads, hd=cfg.head_dim
     )
     c: dict[str, Any] = {}
     if spec.mixer in ("attn", "attn+cross"):
-        L = cache_len if spec.window is None else min(cache_len, spec.window)
-        c["k"] = jnp.zeros((batch, L, kv["n_kv"], kv["hd"]), dtype)
-        c["v"] = jnp.zeros((batch, L, kv["n_kv"], kv["hd"]), dtype)
-        c["pos"] = jnp.full((batch, L), -1, jnp.int32)
+        if paged_pool is not None:
+            num_pages, page_size = paged_pool
+            c.update(attn_mod.init_paged_kv_cache(
+                num_pages, page_size, _attn_spec(cfg, spec), dtype))
+        else:
+            L = cache_len if spec.window is None else min(cache_len, spec.window)
+            c["k"] = jnp.zeros((batch, L, kv["n_kv"], kv["hd"]), dtype)
+            c["v"] = jnp.zeros((batch, L, kv["n_kv"], kv["hd"]), dtype)
+            c["pos"] = jnp.full((batch, L), -1, jnp.int32)
     if spec.mixer in ("cross_attn", "attn+cross"):
         c["ck"] = jnp.zeros((batch, cfg.cross_kv_len, kv["n_kv"], kv["hd"]), dtype)
         c["cv"] = jnp.zeros((batch, cfg.cross_kv_len, kv["n_kv"], kv["hd"]), dtype)
@@ -369,46 +391,95 @@ def _layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, cache_len: int,
 
 
 def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16, *, global_cap: int | None = None):
+               dtype=jnp.bfloat16, *, global_cap: int | None = None,
+               page_size: int = 16, num_pages: int | None = None):
     """Decode cache pytree, stacked (repeats, …) per pattern position.
 
     ``global_cap`` bounds full-attention layers' KV length (used for
-    gemma2's global layers at ``long_500k`` — see DESIGN.md)."""
+    gemma2's global layers at ``long_500k`` — see DESIGN.md).
+
+    With ``cfg.kv_impl == "paged"`` the attention layers share a page
+    pool instead of per-sequence ring buffers and the result is a dict
+    ``{"layers", "page_table", "length", "active"}``: ``page_table``
+    (batch, cache_len/page_size) maps each slot's logical pages to
+    physical pool pages (identity-allocated here when ``num_pages``
+    covers every slot — the continuous-batching serve loop overrides it
+    from a host :class:`~repro.kernels.PagePool`), ``length`` carries
+    per-sequence positions (ragged decode), and ``active`` masks live
+    slots.  ``num_pages`` below full coverage *oversubscribes* the pool
+    (admission control happens on the host)."""
+    paged = cfg.kv_impl == "paged"
+    pages_per_seq = -(-cache_len // page_size)
+    if paged and num_pages is None:
+        num_pages = 1 + batch * pages_per_seq
+    pool = (num_pages, page_size) if paged else None
     caches = []
     for spec in cfg.pattern:
         L = cache_len
         if global_cap is not None and spec.mixer == "attn" and spec.window is None:
             L = min(L, global_cap)
-        one = _layer_cache(cfg, spec, batch, L, dtype)
+        one = _layer_cache(cfg, spec, batch, L, dtype, paged_pool=pool)
         caches.append(
             jax.tree.map(
                 lambda x: jnp.broadcast_to(x[None], (cfg.repeats,) + x.shape),
                 one,
             )
         )
-    return tuple(caches)
+    if not paged:
+        return tuple(caches)
+    if num_pages >= 1 + batch * pages_per_seq:
+        # identity allocation: slot b owns pages [1 + b·P, 1 + (b+1)·P)
+        table = 1 + jnp.arange(batch * pages_per_seq,
+                               dtype=jnp.int32).reshape(batch, pages_per_seq)
+    else:
+        table = jnp.zeros((batch, pages_per_seq), jnp.int32)  # host-assigned
+    return {
+        "layers": tuple(caches),
+        "page_table": table,
+        "length": jnp.zeros((batch,), jnp.int32),
+        "active": jnp.ones((batch,), bool),
+    }
 
 
-def _decode_layer(cfg, spec: LayerSpec, p, x, cache, index):
+def _decode_layer(cfg, spec: LayerSpec, p, x, cache, index, *, paged=None):
+    """One decode layer.  ``paged = (page_table, q_pos, active)`` routes
+    the self-attention through the shared page pool (ragged per-sequence
+    positions); ``None`` keeps the dense ring-buffer path (scalar
+    ``index``)."""
     p = act.gather_params(_cast(p, x.dtype), cfg)
     aspec = _attn_spec(cfg, spec)
     h = _norm(cfg, p["norm1"], x)
     if spec.mixer == "attn":
-        y, cache = attn_mod.decode_attention(p["mixer"], h, cache, index, aspec)
+        if paged is not None:
+            pt, q_pos, active = paged
+            y, upd = attn_mod.paged_decode_attention(
+                p["mixer"], h, cache, pt, q_pos, aspec, active=active)
+            cache = {**cache, **upd}
+        else:
+            y, cache = attn_mod.decode_attention(p["mixer"], h, cache, index,
+                                                 aspec)
     elif spec.mixer == "cross_attn":
         y, _ = attn_mod.decode_attention(
             p["mixer"], h, {"k": cache["ck"], "v": cache["cv"]}, index, aspec,
             cross=True,
         )
     elif spec.mixer == "attn+cross":
-        y, self_c = attn_mod.decode_attention(
-            p["mixer"], h, {k: cache[k] for k in ("k", "v", "pos")}, index, aspec
-        )
+        if paged is not None:
+            pt, q_pos, active = paged
+            y, self_c = attn_mod.paged_decode_attention(
+                p["mixer"], h, {k: cache[k] for k in ("kp", "vp")}, pt, q_pos,
+                aspec, active=active)
+            cross_index = q_pos
+        else:
+            y, self_c = attn_mod.decode_attention(
+                p["mixer"], h, {k: cache[k] for k in ("k", "v", "pos")},
+                index, aspec)
+            cross_index = index
         x = x + y
         h = _norm(cfg, p["norm_cross"], x)
         y, _ = attn_mod.decode_attention(
-            p["cross"], h, {"k": cache["ck"], "v": cache["cv"]}, index, aspec,
-            cross=True,
+            p["cross"], h, {"k": cache["ck"], "v": cache["cv"]}, cross_index,
+            aspec, cross=True,
         )
         cache = {**cache, **self_c}
     elif spec.mixer == "mamba":
@@ -422,34 +493,35 @@ def _decode_layer(cfg, spec: LayerSpec, p, x, cache, index):
     if spec.post_norm and spec.mixer != "attn+cross":
         y = _norm(cfg, p["norm_post1"], y)
     x = x + y
-    if spec.ffn == "none":
-        return x, cache
-    h = _norm(cfg, p["norm2"], x)
-    if spec.ffn == "dense":
-        y = moe_mod.dense_ffn(p["ffn"], h)
-    elif spec.ffn == "moe":
-        y, _ = moe_mod.moe_ffn(p["ffn"], h, top_k=cfg.moe_top_k,
-                               capacity_factor=cfg.moe_capacity_factor,
-                               impl=cfg.moe_impl)
-    elif spec.ffn == "channel_mix":
-        y, cm = rwkv_mod.decode_channel_mix(p["ffn"], h, cache)
-        cache = {**cache, **cm}
-    if spec.post_norm:
-        y = _norm(cfg, p["norm_post2"], y)
-    return x + y, cache
+    x, _, upd = _ffn_block(cfg, spec, p, x, mode="decode", cache=cache)
+    if upd:
+        cache = {**cache, **upd}
+    return x, cache
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, index, *,
                 compute_dtype=jnp.bfloat16):
     """One serve step: token (B, 1) int32 at position ``index`` (scalar),
-    against ``cache``.  Returns (logits (B, 1, padded_vocab), new_cache)."""
+    against ``cache``.  Returns (logits (B, 1, padded_vocab), new_cache).
+
+    For a paged cache (``cfg.kv_impl == "paged"``) ``index`` is ignored:
+    per-sequence positions come from ``cache["length"]`` (ragged across
+    the batch) and only ``cache["active"]`` slots advance — inactive
+    slots compute but write the pool's scratch page."""
+    paged = isinstance(cache, dict)
     B = token.shape[0]
     x = params["embed"][token].astype(compute_dtype)
     if cfg.embed_scale:
         x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
     if cfg.pos_embed == "learned":
-        x = x + params["pos"][index][None, None].astype(compute_dtype)
+        if paged:
+            x = x + params["pos"][cache["length"]][:, None].astype(compute_dtype)
+        else:
+            x = x + params["pos"][index][None, None].astype(compute_dtype)
 
+    layers = cache["layers"] if paged else cache
+    pctx = (cache["page_table"], cache["length"], cache["active"]) \
+        if paged else None
     # Decode unrolls the repeats (python loop): one-token HLO per layer is
     # tiny, and unrolling lets every layer's cache keep its sharding —
     # SPMD handles per-iteration dynamic-slice resharding of scanned cache
@@ -457,17 +529,210 @@ def decode_step(params, cfg: ArchConfig, token, cache, index, *,
     new_stacks = []
     for r in range(cfg.repeats):
         p_r = jax.tree.map(lambda a: a[r], params["blocks"])
-        c_r = jax.tree.map(lambda a: a[r], cache)
+        c_r = jax.tree.map(lambda a: a[r], layers)
         new_c = []
         for j, spec in enumerate(cfg.pattern):
-            x, cj = _decode_layer(cfg, spec, p_r[j], x, c_r[j], index)
+            x, cj = _decode_layer(cfg, spec, p_r[j], x, c_r[j], index,
+                                  paged=pctx)
             x = act.shard_batch_act(x)
             new_c.append(cj)
         new_stacks.append(tuple(new_c))
-    new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *new_stacks)
+    new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *new_stacks)
     x = _norm(cfg, params["final_norm"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = x @ head.astype(compute_dtype)
     if cfg.final_softcap:
         logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if paged:
+        new_cache = {
+            **cache,
+            "layers": new_layers,
+            "length": cache["length"] + cache["active"].astype(jnp.int32),
+        }
+    else:
+        new_cache = new_layers
     return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# batched prefill + fused decode loop (the serve hot path)
+# --------------------------------------------------------------------------
+
+
+def _dense_prefill_write(cache, k, v, positions, lengths):
+    """Fill a dense ring buffer from a prefilled sequence in one scatter.
+    Padded positions (≥ length) keep ``pos = -1`` so decode never attends
+    them.  When S exceeds the ring length only the last L tokens are kept
+    (uniform lengths assumed in that regime — the windowed ring is what
+    makes it correct for every sequence at the same position)."""
+    L = cache["k"].shape[1]
+    B, S = k.shape[:2]
+    if S > L:
+        k, v, positions = k[:, -L:], v[:, -L:], positions[:, -L:]
+    slots = positions % L
+    b_ix = jnp.arange(B, dtype=jnp.int32)[:, None]
+    pos = jnp.where(positions < lengths[:, None], positions, -1)
+    return {
+        "k": cache["k"].at[b_ix, slots].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[b_ix, slots].set(v.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[b_ix, slots].set(pos),
+    }
+
+
+def _prefill_layer(cfg, spec: LayerSpec, p, x, cache, positions, lengths,
+                   paged):
+    """One prefill layer: forward + fill this layer's decode cache."""
+    p = act.gather_params(_cast(p, x.dtype), cfg)
+    aspec = _attn_spec(cfg, spec)
+    h = _norm(cfg, p["norm1"], x)
+    if spec.mixer in ("attn", "attn+cross"):
+        y, k, v = attn_mod.prefill_attention(p["mixer"], h, aspec,
+                                             positions=positions,
+                                             lengths=lengths)
+        if paged is not None:
+            kp, vp = paged_k.paged_write_prefill(
+                cache["kp"], cache["vp"], k, v, paged, lengths)
+            cache = {**cache, "kp": kp, "vp": vp}
+        else:
+            cache = {**cache,
+                     **_dense_prefill_write(cache, k, v, positions, lengths)}
+        if spec.mixer == "attn+cross":
+            if spec.post_norm:
+                y = _norm(cfg, p["norm_post1"], y)
+            x = x + y
+            h = _norm(cfg, p["norm_cross"], x)
+            y = attn_mod.attention_with_kv(
+                p["cross"], h, cache["ck"], cache["cv"], aspec,
+                positions=positions)
+    elif spec.mixer == "cross_attn":
+        y = attn_mod.attention_with_kv(p["mixer"], h, cache["ck"],
+                                       cache["cv"], aspec,
+                                       positions=positions)
+    elif spec.mixer == "mamba":
+        y, st = mamba_mod.mamba(p["mixer"], h, d_state=cfg.mamba_d_state,
+                                d_conv=cfg.mamba_d_conv, return_state=True)
+        cache = {**cache, **st}
+    elif spec.mixer == "rwkv":
+        y, st = rwkv_mod.time_mix(p["mixer"], h,
+                                  head_size=cfg.rwkv_head_size,
+                                  return_state=True)
+        cache = {**cache, **st}
+    else:
+        raise ValueError(spec.mixer)
+    if spec.post_norm and spec.mixer != "attn+cross":
+        y = _norm(cfg, p["norm_post1"], y)
+    x = x + y
+    x, _, upd = _ffn_block(cfg, spec, p, x, mode="prefill")
+    if upd:
+        cache = {**cache, **upd}
+    return x, cache
+
+
+def prefill(params, cfg: ArchConfig, tokens, cache, *, lengths=None,
+            compute_dtype=jnp.bfloat16):
+    """Batched prefill: ONE forward pass that fills the decode cache.
+
+    tokens: (B, S) int32, right-padded when ``lengths (B,)`` is given —
+    sample the first generated token from ``logits[b, lengths[b]-1]``.
+    Returns (logits (B, S, padded_vocab), cache).
+
+    Attention layers mask padded keys exactly; recurrent mixers (mamba /
+    rwkv) fold the whole padded window into their state, so ragged
+    ``lengths`` is only safe for attention-family archs — prefill
+    recurrent archs at their exact prompt length (the continuous-batching
+    serve loop admits per-sequence, unpadded)."""
+    paged = isinstance(cache, dict)
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_embed == "learned":
+        x = x + params["pos"][:S][None].astype(compute_dtype)
+    x = act.shard_batch_act(x)
+    lens = (jnp.full((B,), S, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32))
+
+    layers = cache["layers"] if paged else cache
+    table = cache["page_table"] if paged else None
+    new_stacks = []
+    for r in range(cfg.repeats):
+        p_r = jax.tree.map(lambda a: a[r], params["blocks"])
+        c_r = jax.tree.map(lambda a: a[r], layers)
+        new_c = []
+        for j, spec in enumerate(cfg.pattern):
+            x, cj = _prefill_layer(cfg, spec, p_r[j], x, c_r[j], positions,
+                                   lens, table)
+            x = act.shard_batch_act(x)
+            new_c.append(cj)
+        new_stacks.append(tuple(new_c))
+    new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *new_stacks)
+    x = _norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(compute_dtype)
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if paged:
+        new_cache = {**cache, "layers": new_layers,
+                     "length": jnp.where(cache["active"], lens, 0)}
+    else:
+        new_cache = new_layers
+    return logits, new_cache
+
+
+def decode_loop(params, cfg: ArchConfig, token, cache, index, steps: int, *,
+                compute_dtype=jnp.bfloat16):
+    """``steps`` greedy decode iterations as one ``lax.scan`` program —
+    generated tokens accumulate ON DEVICE and transfer once, instead of a
+    jit dispatch + host sync per token.
+
+    token: (B, 1) int32 — the first token to feed (it is also the first
+    token emitted, matching the serve convention that the argmax of the
+    prefill logits is the first generated token).  ``index`` is the
+    scalar start position for a dense cache (ignored by paged caches).
+    Returns (tokens (B, steps), next_token (B, 1), cache)."""
+    V = cfg.vocab
+
+    def body(carry, _):
+        tok, cache, idx = carry
+        logits, cache = decode_step(params, cfg, tok, cache, idx,
+                                    compute_dtype=compute_dtype)
+        ntok = jnp.argmax(logits[:, :, :V], axis=-1).astype(jnp.int32)
+        return (ntok, cache, idx + 1), tok[:, 0]
+
+    (ntok, cache, _), toks = jax.lax.scan(
+        body, (token, cache, jnp.asarray(index, jnp.int32)), None,
+        length=steps)
+    return jnp.moveaxis(toks, 0, 1), ntok, cache
+
+
+def slot_cache(cache, slot: int):
+    """One batch slot's view of a paged cache (B=1), for per-admission
+    prefill: pool arrays (``kp``/``vp``) are shared and pass through
+    whole; per-slot state (recurrent mixers, cross k/v) is sliced."""
+    def per_layer(d):
+        return {k: (v if k in ("kp", "vp") else v[:, slot:slot + 1])
+                for k, v in d.items()}
+
+    return {
+        "layers": tuple(per_layer(d) for d in cache["layers"]),
+        "page_table": cache["page_table"][slot:slot + 1],
+        "length": cache["length"][slot:slot + 1],
+        "active": jnp.ones((1,), bool),
+    }
+
+
+def merge_slot_cache(cache, sub, slot: int):
+    """Merge a ``slot_cache`` view updated by :func:`prefill` back into
+    the full paged cache (pool arrays replace; per-slot state scatters)."""
+    def per_layer(d, s):
+        return {k: (s[k] if k in ("kp", "vp")
+                    else d[k].at[:, slot:slot + 1].set(s[k]))
+                for k in d}
+
+    return {
+        **cache,
+        "layers": tuple(per_layer(d, s)
+                        for d, s in zip(cache["layers"], sub["layers"])),
+        "length": cache["length"].at[slot].set(sub["length"][0]),
+    }

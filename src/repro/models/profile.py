@@ -18,7 +18,43 @@ from repro.nn.moe import moe_capacity
 _F = 4  # fp32 bytes
 
 
-def _layer_rows(cfg: ArchConfig, *, seq: int) -> list[tuple]:
+def _effective_kv_len(window: int | None, kv_len: int, cache_len: int,
+                      page_size: int | None) -> int:
+    """KV positions one decode token actually reads from one layer's
+    cache: the whole (window-capped) ring when dense, or only the pages
+    overlapping the live span ``[max(0, t-window+1), t]`` when paged."""
+    if page_size is None:
+        return min(cache_len, window or cache_len)
+    t = max(kv_len - 1, 0)
+    first = 0 if window is None else max(0, t - window + 1)
+    return (t // page_size - first // page_size + 1) * page_size
+
+
+def kv_read_bytes_per_token(cfg: ArchConfig, kv_len: int, *,
+                            cache_len: int, page_size: int | None = None,
+                            bytes_per_el: int = 4) -> float:
+    """Per-decoded-token KV-cache read traffic summed over the
+    self-attention layers.
+
+    Dense ring buffers (``page_size=None``) read their whole allocation
+    every token — ``cache_len`` (window-capped) regardless of how many
+    tokens the sequence actually holds.  The paged path reads only the
+    pages overlapping the live span ``[max(0, t-window+1), t]`` at
+    ``t = kv_len - 1`` — *used* pages, not ``max_len`` (this is the
+    accounting the cost model should charge a decode workload)."""
+    total = 0.0
+    row = 2 * cfg.n_kv_heads * cfg.head_dim * bytes_per_el   # k + v
+    for i in range(cfg.num_layers):
+        spec = cfg.pattern[i % len(cfg.pattern)]
+        if spec.mixer not in ("attn", "attn+cross"):
+            continue
+        total += _effective_kv_len(spec.window, kv_len, cache_len,
+                                   page_size) * row
+    return total
+
+
+def _layer_rows(cfg: ArchConfig, *, seq: int,
+                decode_kv: tuple | None = None) -> list[tuple]:
     d, hd = cfg.d_model, cfg.head_dim
     H, KV = cfg.n_heads, cfg.n_kv_heads
     rows: list[tuple] = []
@@ -37,6 +73,13 @@ def _layer_rows(cfg: ArchConfig, *, seq: int) -> list[tuple]:
             flops += n_attn * (proj + score)
             w_bytes += n_attn * (2 * d * (H + 2 * KV) * hd) * _F
             kind = "cross_attention" if spec.mixer != "attn" else "attention"
+            if decode_kv is not None and spec.mixer != "cross_attn":
+                # decode profiling: charge the true per-token KV read —
+                # used pages for the paged cache, the whole ring for dense
+                kv_len, cache_len, page_size = decode_kv
+                eff = _effective_kv_len(spec.window, kv_len, cache_len,
+                                        page_size)
+                in_bytes += 2.0 * eff * KV * hd * _F
         elif spec.mixer == "mamba":
             din = cfg.mamba_expand * d
             flops += 2.0 * d * 2 * din + 2.0 * din * d + 9.0 * din * cfg.mamba_d_state
@@ -78,6 +121,17 @@ def _layer_rows(cfg: ArchConfig, *, seq: int) -> list[tuple]:
     return rows
 
 
-def profile_arch(arch, fleet, *, seq: int = 4096) -> list[LayerProfile]:
+def profile_arch(arch, fleet, *, seq: int = 4096,
+                 decode_kv_len: int | None = None,
+                 kv_cache_len: int | None = None,
+                 kv_page_size: int | None = None) -> list[LayerProfile]:
+    """``decode_kv_len`` switches the attention rows to decode-mode KV
+    accounting: each token reads the cache — the whole ``kv_cache_len``
+    ring when ``kv_page_size`` is None (dense), or only the used pages of
+    a ``kv_page_size``-paged pool at sequence length ``decode_kv_len``."""
     cfg = get_config(arch) if isinstance(arch, str) else arch
-    return profile_layers(_layer_rows(cfg, seq=seq), fleet)
+    decode_kv = None
+    if decode_kv_len is not None:
+        decode_kv = (decode_kv_len, kv_cache_len or seq, kv_page_size)
+    return profile_layers(_layer_rows(cfg, seq=seq, decode_kv=decode_kv),
+                          fleet)

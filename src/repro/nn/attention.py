@@ -19,6 +19,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
+from repro.kernels import paged_attention as paged_k
 from repro.nn.base import apply_rope, rmsnorm, softcap
 from repro.parallel import act
 
@@ -200,7 +202,10 @@ def decode_attention(p, x, cache, index, spec: AttnSpec, *, cross: bool = False)
     """
     B = x.shape[0]
     H, KV, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
-    q_pos = jnp.full((B, 1), index, jnp.int32)
+    # index: scalar for self-decode; the cross path also accepts a (B,)
+    # per-sequence position vector (continuous batching, ragged lengths)
+    idx = jnp.asarray(index, jnp.int32)
+    q_pos = jnp.broadcast_to(jnp.atleast_1d(idx)[:, None], (B, 1))
     q = (x @ p["wq"]).reshape(B, 1, H, hd)
     if spec.qk_norm:
         q = rmsnorm(q, p["q_norm"])
@@ -251,3 +256,125 @@ def decode_attention(p, x, cache, index, spec: AttnSpec, *, cross: bool = False)
     w = jax.nn.softmax(logits, axis=-1).astype(vq.dtype)
     o = jnp.einsum("bkgqs,bskd->bqkgd", w, vq).reshape(B, 1, H * hd)
     return o @ p["wo"], cache
+
+
+# --------------------------------------------------------------------------
+# batched prefill (one forward that also yields the cacheable k/v)
+# --------------------------------------------------------------------------
+
+
+def _project_q(p, x, spec: AttnSpec, positions):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, spec.n_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+    if spec.rope:
+        q = apply_rope(q, positions, theta=spec.rope_theta,
+                       fraction=spec.rope_fraction)
+    return q
+
+
+def prefill_attention(p, x, spec: AttnSpec, *, positions, lengths=None):
+    """Full-sequence self-attention that ALSO returns the (unexpanded,
+    post-rope) k/v so the caller can fill a decode cache in one shot.
+
+    x: (B, S, D); positions: (B, S); ``lengths (B,)`` masks right-padded
+    prompts — padded keys are never attended (padded *queries* produce
+    garbage rows the caller discards).  Returns
+    (out (B, S, D), k (B, S, KV, hd), v (B, S, KV, hd)).
+    """
+    B, S, _ = x.shape
+    H, KV, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q = _project_q(p, x, spec, positions)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    if spec.qk_norm:
+        k = rmsnorm(k, p["k_norm"])
+    if spec.rope:
+        k = apply_rope(k, positions, theta=spec.rope_theta,
+                       fraction=spec.rope_fraction)
+    k_pos = positions
+    if lengths is not None:
+        k_pos = jnp.where(positions < lengths[:, None], positions, -1)
+    qs = act.shard_heads(q, axis=2)
+    ke = act.shard_heads(_expand_kv(k, H), axis=2)
+    ve = act.shard_heads(_expand_kv(v, H), axis=2)
+    if S <= BLOCKWISE_THRESHOLD:
+        o = _sdpa_direct(qs, ke, ve, positions, k_pos, spec)
+    else:
+        o = _sdpa_blockwise(qs, ke, ve, positions, k_pos, spec)
+    return o.reshape(B, S, H * hd) @ p["wo"], k, v
+
+
+def attention_with_kv(p, x, k, v, spec: AttnSpec, *, positions):
+    """Cross-attention over precomputed (projected, unexpanded) k/v — the
+    full-sequence analogue of ``decode_attention(cross=True)``: q is
+    normed/roped at ``positions``, every key is attended (non-causal,
+    no window)."""
+    B, S, _ = x.shape
+    H = spec.n_heads
+    q = _project_q(p, x, spec, positions)
+    Sk = k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32), (B, Sk))
+    cspec = dataclasses.replace(spec, causal=False, window=None)
+    o = _sdpa_direct(
+        act.shard_heads(q, axis=2),
+        act.shard_heads(_expand_kv(k.astype(q.dtype), H), axis=2),
+        act.shard_heads(_expand_kv(v.astype(q.dtype), H), axis=2),
+        positions, k_pos, cspec,
+    )
+    return o.reshape(B, S, H * spec.head_dim) @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# paged KV-cache decode (shared page pool; see kernels/paged_attention.py)
+# --------------------------------------------------------------------------
+
+
+def init_paged_kv_cache(num_pages: int, page_size: int, spec: AttnSpec,
+                        dtype=jnp.bfloat16):
+    """One layer's share of the page pool: (num_pages, page_size, KV, hd)
+    k/v arrays.  The page table / lengths live once per model (they are
+    shared by every layer), not here."""
+    shape = (num_pages, page_size, spec.n_kv_heads, spec.head_dim)
+    return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+
+
+def paged_decode_attention(p, x, cache, page_table, q_pos, spec: AttnSpec, *,
+                           active=None, impl: str = "auto"):
+    """One-token decode against the shared page pool.
+
+    x: (B, 1, D); ``cache`` holds this layer's pool ({"kp", "vp"});
+    page_table: (B, P) int32; q_pos: (B,) int32 — per-sequence position
+    of the new token (== tokens already cached, ragged across the
+    batch).  Writes the new k/v into the sequence's page, then attends
+    positions ``max(0, q_pos-window+1) .. q_pos`` — reading only the
+    pages that hold them.  Same GQA grouped form / rope / qk-norm /
+    softcap / window semantics as :func:`decode_attention` (the dense
+    oracle).  Returns (out (B, 1, D), {"kp", "vp"}).
+    """
+    B = x.shape[0]
+    H, KV, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    if active is None:
+        active = jnp.ones((B,), bool)
+    pos2 = q_pos[:, None]                                   # (B, 1)
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k_new = (x @ p["wk"]).reshape(B, 1, KV, hd)
+    v_new = (x @ p["wv"]).reshape(B, 1, KV, hd)
+    if spec.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k_new = rmsnorm(k_new, p["k_norm"])
+    if spec.rope:
+        q = apply_rope(q, pos2, theta=spec.rope_theta,
+                       fraction=spec.rope_fraction)
+        k_new = apply_rope(k_new, pos2, theta=spec.rope_theta,
+                           fraction=spec.rope_fraction)
+    kp, vp = paged_k.paged_write(cache["kp"], cache["vp"], k_new[:, 0],
+                                 v_new[:, 0], page_table, q_pos, active)
+    qg = q[:, 0].reshape(B, KV, H // KV, hd)
+    o = kernel_ops.paged_attention_decode(
+        qg, kp, vp, page_table, q_pos, window=spec.window,
+        softcap=spec.logit_softcap, impl=impl,
+    )
+    out = o.reshape(B, 1, H * hd) @ p["wo"]
+    return out, {"kp": kp, "vp": vp}

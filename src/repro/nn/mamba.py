@@ -53,13 +53,18 @@ def _ssm_inputs(p, xc, dt_rank: int, d_state: int):
 SCAN_CHUNK = 512
 
 
-def mamba(p, x, *, d_state: int = 16, d_conv: int = 4, chunk: int = SCAN_CHUNK):
+def mamba(p, x, *, d_state: int = 16, d_conv: int = 4, chunk: int = SCAN_CHUNK,
+          return_state: bool = False):
     """Full-sequence forward. x: (B, S, D) → (B, S, D).
 
     Chunked selective scan: sequential ``lax.scan`` over time chunks
     carrying the SSM state, parallel ``associative_scan`` within a chunk;
     the discretization (Ābar, B̄·x) is computed *inside* the (rematted)
     chunk body so no (B, S, din, N) tensor ever materializes.
+
+    ``return_state=True`` additionally returns the decode cache after the
+    sequence ({"h", "conv"} — exactly what stepping ``decode_mamba`` over
+    the same tokens would carry), for batched prefill.
     """
     B, S, D = x.shape
     from repro.parallel.act import shard_last_dim
@@ -71,6 +76,7 @@ def mamba(p, x, *, d_state: int = 16, d_conv: int = 4, chunk: int = SCAN_CHUNK):
     xc, z = shard_last_dim(xc), shard_last_dim(z)
     # depthwise causal conv1d along time
     xpad = jnp.pad(xc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv_tail = xpad[:, S:, :]          # last d_conv-1 raw (pre-conv) inputs
     xc = sum(
         xpad[:, i : i + S, :] * p["conv_w"][i] for i in range(d_conv)
     ) + p["conv_b"]
@@ -96,11 +102,14 @@ def mamba(p, x, *, d_state: int = 16, d_conv: int = 4, chunk: int = SCAN_CHUNK):
         return h[:, -1], y.astype(xc_c.dtype)
 
     h0 = jnp.zeros((B, din, d_state), jnp.float32)
-    _, ys = jax.lax.scan(chunk_body, h0, xcs)                  # (nc,B,C,din)
+    h_last, ys = jax.lax.scan(chunk_body, h0, xcs)             # (nc,B,C,din)
     y = jnp.moveaxis(ys, 0, 1).reshape(B, S, din)
     y = y + p["D"] * xc
     y = y * jax.nn.silu(z)
-    return y @ p["out_proj"]
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"h": h_last, "conv": conv_tail}
+    return out
 
 
 def init_mamba_cache(batch: int, d_model: int, *, d_state: int = 16,

@@ -70,8 +70,11 @@ def _five_streams(p, x, x_prev):
     return outs
 
 
-def time_mix(p, x, *, head_size: int = 64):
-    """Full-sequence time-mix. x: (B, S, D) → (B, S, D)."""
+def time_mix(p, x, *, head_size: int = 64, return_state: bool = False):
+    """Full-sequence time-mix. x: (B, S, D) → (B, S, D).
+
+    ``return_state=True`` additionally returns the decode cache after the
+    sequence ({"state", "tm_shift"}), for batched prefill."""
     B, S, D = x.shape
     H = D // head_size
     from repro.parallel.act import shard_heads
@@ -97,7 +100,7 @@ def time_mix(p, x, *, head_size: int = 64):
         return S_new, out
 
     S0 = jnp.zeros((B, H, head_size, head_size), jnp.float32)
-    _, out = jax.lax.scan(
+    S_last, out = jax.lax.scan(
         step,
         S0,
         (
@@ -108,7 +111,11 @@ def time_mix(p, x, *, head_size: int = 64):
     )
     out = jnp.moveaxis(out, 0, 1).reshape(B, S, D)     # (B,S,D)
     out = rmsnorm(out, p["ln_x"])                      # group-norm stand-in
-    return (out.astype(x.dtype) * g) @ p["wo"]
+    y = (out.astype(x.dtype) * g) @ p["wo"]
+    if return_state:
+        return y, {"state": S_last,
+                   "tm_shift": x[:, -1].astype(jnp.float32)}
+    return y
 
 
 def init_channel_mix(key, d_model: int, d_ff: int):

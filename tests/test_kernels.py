@@ -242,3 +242,115 @@ class TestMoeDispatchCombine:
                                    atol=1e-5)
         np.testing.assert_allclose(np.asarray(gw_i), np.asarray(gw_s),
                                    atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# paged KV-cache decode attention (kernels/paged_attention.py)
+# --------------------------------------------------------------------------
+
+from repro.kernels import ops as kernel_ops  # noqa: E402
+from repro.kernels import paged_attention as paged_k  # noqa: E402
+
+
+def _paged_setup(B, KV, G, hd, ps, P, fold=0, dtype=jnp.float32):
+    """Identity-allocated pool (slot b owns pages [1+bP, 1+(b+1)P))."""
+    key = jax.random.fold_in(KEY, 100 + fold)
+    N = 1 + B * P
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, G, hd), dtype)
+    kp = jax.random.normal(jax.random.fold_in(key, 2), (N, ps, KV, hd), dtype)
+    vp = jax.random.normal(jax.random.fold_in(key, 3), (N, ps, KV, hd), dtype)
+    table = (1 + jnp.arange(B * P, dtype=jnp.int32)).reshape(B, P)
+    return q, kp, vp, table
+
+
+def _paged_dense_ref(q, kp, vp, table, q_pos, *, window, softcap):
+    """Straight-line oracle: densify the pages, masked grouped softmax."""
+    B, KV, G, hd = q.shape
+    ps, P = kp.shape[1], table.shape[1]
+    k = np.asarray(kp, np.float32)[np.asarray(table)].reshape(B, P * ps, KV, hd)
+    v = np.asarray(vp, np.float32)[np.asarray(table)].reshape(B, P * ps, KV, hd)
+    qn = np.asarray(q, np.float32)
+    pos = np.arange(P * ps)
+    out = np.zeros_like(qn)
+    for b in range(B):
+        valid = pos <= int(q_pos[b])
+        if window is not None:
+            valid &= pos > int(q_pos[b]) - window
+        s = np.einsum("kgd,skd->kgs", qn[b], k[b]) / np.sqrt(hd)
+        if softcap:
+            s = softcap * np.tanh(s / softcap)
+        s = np.where(valid[None, None, :], s, -1e30)
+        s -= s.max(-1, keepdims=True)
+        w = np.exp(s)
+        w /= w.sum(-1, keepdims=True)
+        out[b] = np.einsum("kgs,skd->kgd", w, v[b])
+    return out
+
+
+class TestPagedDecodeAttention:
+    CASES = [
+        # B, KV, G, hd, ps, P, window, softcap — incl. multi-page spans
+        (2, 2, 2, 64, 4, 4, None, None),
+        (2, 1, 4, 32, 8, 3, 5, 30.0),
+        (1, 4, 1, 16, 4, 3, None, 50.0),
+        (3, 2, 4, 32, 4, 5, 7, None),
+    ]
+
+    @pytest.mark.parametrize("B,KV,G,hd,ps,P,window,sc", CASES)
+    def test_gather_matches_dense_oracle(self, B, KV, G, hd, ps, P, window, sc):
+        q, kp, vp, table = _paged_setup(B, KV, G, hd, ps, P)
+        # positions spanning >1 page and mid-page, ragged across the batch
+        q_pos = jnp.asarray([(ps * P - 1), ps + 1, 0][:B], jnp.int32)
+        got = kernel_ops.paged_attention_decode(
+            q, kp, vp, table, q_pos, window=window, softcap=sc, impl="gather")
+        want = _paged_dense_ref(q, kp, vp, table, q_pos, window=window,
+                                softcap=sc)
+        np.testing.assert_allclose(np.asarray(got), want, atol=2e-5)
+
+    @pytest.mark.parametrize("B,KV,G,hd,ps,P,window,sc", CASES)
+    def test_interpret_matches_gather(self, B, KV, G, hd, ps, P, window, sc):
+        """The Pallas kernel body (online softmax over scalar-prefetched
+        pages) against the jnp gather formulation."""
+        q, kp, vp, table = _paged_setup(B, KV, G, hd, ps, P)
+        q_pos = jnp.asarray([(ps * P - 1), ps + 1, 0][:B], jnp.int32)
+        got = kernel_ops.paged_attention_decode(
+            q, kp, vp, table, q_pos, window=window, softcap=sc,
+            impl="interpret")
+        want = kernel_ops.paged_attention_decode(
+            q, kp, vp, table, q_pos, window=window, softcap=sc, impl="gather")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5)
+
+    @given(st.integers(0, 63), st.integers(0, 4))
+    @settings(max_examples=12, deadline=None)
+    def test_property_any_position(self, q_pos, fold):
+        """Randomized positions (incl. page boundaries) stay equivalent."""
+        B, KV, G, hd, ps, P = 1, 2, 2, 16, 8, 8
+        q, kp, vp, table = _paged_setup(B, KV, G, hd, ps, P, fold=fold)
+        qp = jnp.asarray([q_pos], jnp.int32)
+        got = kernel_ops.paged_attention_decode(
+            q, kp, vp, table, qp, window=11, impl="interpret")
+        want = _paged_dense_ref(q, kp, vp, table, qp, window=11, softcap=None)
+        np.testing.assert_allclose(np.asarray(got), want, atol=2e-5)
+
+    def test_write_then_read_roundtrip(self):
+        """paged_write lands the row where the gather path reads it; an
+        inactive slot's write is steered to the scratch page."""
+        B, KV, G, hd, ps, P = 2, 2, 2, 16, 4, 3
+        q, kp, vp, table = _paged_setup(B, KV, G, hd, ps, P)
+        k_new = jax.random.normal(KEY, (B, KV, hd))
+        v_new = jax.random.normal(jax.random.fold_in(KEY, 7), (B, KV, hd))
+        q_pos = jnp.asarray([5, 2], jnp.int32)
+        active = jnp.asarray([True, False])
+        kp2, vp2 = paged_k.paged_write(kp, vp, k_new, v_new, table, q_pos,
+                                       active)
+        # active slot 0: row at (table[0, 5//ps], 5%ps)
+        pid = int(table[0, 5 // ps])
+        np.testing.assert_allclose(np.asarray(kp2[pid, 5 % ps]),
+                                   np.asarray(k_new[0]))
+        # inactive slot 1: its own pages untouched, scratch page got the row
+        pid1 = int(table[1, 2 // ps])
+        np.testing.assert_allclose(np.asarray(kp2[pid1, 2 % ps]),
+                                   np.asarray(kp[pid1, 2 % ps]))
+        np.testing.assert_allclose(np.asarray(kp2[0, 2 % ps]),
+                                   np.asarray(k_new[1]))

@@ -1,0 +1,336 @@
+"""Paged KV-cache decode + batched prefill + continuous-batching serve.
+
+Parity pins (the acceptance gates of the paged subsystem):
+  * paged decode == dense ring-buffer decode (the oracle) per step,
+    across GQA / sliding-window / softcap / rope / qk-norm / partial-rope
+    arch configs, with sequences spanning multiple pages;
+  * batched prefill logits == full-attention forward logits, and decode
+    continued from a prefilled cache == decode continued from a stepped
+    cache (dense AND paged);
+  * PagePool invariants under random admit/grow/evict traffic
+    (hypothesis): no page owned by two live slots, free list conserved.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # no hard dep: deterministic fallback shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.kernels.paged_attention import PagePool
+from repro.models import decoder as dec
+from repro.models.profile import kv_read_bytes_per_token, profile_arch
+
+KEY = jax.random.PRNGKey(0)
+#: GQA+rope (llama), window+softcap+post-norm (gemma2), qk-norm+MoE
+#: (qwen3), partial rotary (chatglm)
+PARITY_ARCHS = ["llama3.2-1b", "gemma2-2b", "qwen3-moe-30b-a3b",
+                "chatglm3-6b"]
+
+
+def _cfg(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.has_moe:
+        # full capacity: routing drops would differ between runs only via
+        # float noise; parity should not depend on drop order
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    return cfg
+
+
+class TestPagedDecodeParity:
+    @pytest.mark.parametrize("arch", PARITY_ARCHS)
+    def test_paged_matches_dense_decode(self, arch):
+        """Per-step logits of the paged path vs the dense oracle, over a
+        sequence spanning 3 pages (page_size=4, S=12)."""
+        cfg = _cfg(arch)
+        params = dec.init_model(cfg, KEY)
+        B, S, ps = 2, 12, 4
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        cache_d = dec.init_cache(cfg, B, 32, dtype=jnp.float32)
+        pcfg = dataclasses.replace(cfg, kv_impl="paged")
+        cache_p = dec.init_cache(pcfg, B, 32, dtype=jnp.float32, page_size=ps)
+        for i in range(S):
+            ld, cache_d = dec.decode_step(params, cfg, toks[:, i:i + 1],
+                                          cache_d, jnp.int32(i),
+                                          compute_dtype=jnp.float32)
+            lp, cache_p = dec.decode_step(params, pcfg, toks[:, i:i + 1],
+                                          cache_p, 0,
+                                          compute_dtype=jnp.float32)
+            np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
+                                       atol=1e-4, rtol=1e-4)
+        assert int(cache_p["length"][0]) == S
+
+    @pytest.mark.parametrize("arch", PARITY_ARCHS + ["rwkv6-7b",
+                                                     "jamba-v0.1-52b"])
+    def test_prefill_matches_forward(self, arch):
+        """ONE-forward prefill logits == the training forward's."""
+        cfg = _cfg(arch)
+        params = dec.init_model(cfg, KEY)
+        B, S = 2, 10
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        full, _ = dec.forward(params, cfg, toks, compute_dtype=jnp.float32,
+                              remat=False)
+        cache = dec.init_cache(cfg, B, 32, dtype=jnp.float32)
+        lg, _ = dec.prefill(params, cfg, toks, cache,
+                            compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full),
+                                   atol=1e-4, rtol=1e-4)
+
+    @pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-2b",
+                                      "rwkv6-7b", "jamba-v0.1-52b"])
+    def test_prefill_cache_continues_like_stepping(self, arch):
+        """Decode from a prefilled cache == decode from a stepped cache —
+        the cache contents (KV rings / pools / recurrent state) agree."""
+        cfg = _cfg(arch)
+        params = dec.init_model(cfg, KEY)
+        B, S = 2, 9
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        stepped = dec.init_cache(cfg, B, 32, dtype=jnp.float32)
+        for i in range(S):
+            lg_s, stepped = dec.decode_step(params, cfg, toks[:, i:i + 1],
+                                            stepped, jnp.int32(i),
+                                            compute_dtype=jnp.float32)
+        prefilled = dec.init_cache(cfg, B, 32, dtype=jnp.float32)
+        lg_p, prefilled = dec.prefill(params, cfg, toks, prefilled,
+                                      compute_dtype=jnp.float32)
+        nt = jnp.argmax(lg_p[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+        a, _ = dec.decode_step(params, cfg, nt, prefilled, jnp.int32(S),
+                               compute_dtype=jnp.float32)
+        b, _ = dec.decode_step(params, cfg, nt, stepped, jnp.int32(S),
+                               compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   rtol=1e-4)
+
+    def test_paged_prefill_then_decode(self):
+        """Paged prefill fills the pool exactly like paged stepping."""
+        cfg = _cfg("gemma2-2b")
+        pcfg = dataclasses.replace(cfg, kv_impl="paged")
+        params = dec.init_model(cfg, KEY)
+        B, S, ps = 2, 11, 4
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        stepped = dec.init_cache(pcfg, B, 32, dtype=jnp.float32, page_size=ps)
+        for i in range(S):
+            lg_s, stepped = dec.decode_step(params, pcfg, toks[:, i:i + 1],
+                                            stepped, 0,
+                                            compute_dtype=jnp.float32)
+        prefilled = dec.init_cache(pcfg, B, 32, dtype=jnp.float32,
+                                   page_size=ps)
+        lg_p, prefilled = dec.prefill(params, pcfg, toks, prefilled,
+                                      compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg_p[:, -1:]),
+                                   np.asarray(lg_s), atol=1e-4, rtol=1e-4)
+        nt = jnp.argmax(lg_p[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+        a, _ = dec.decode_step(params, pcfg, nt, prefilled, 0,
+                               compute_dtype=jnp.float32)
+        b, _ = dec.decode_step(params, pcfg, nt, stepped, 0,
+                               compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   rtol=1e-4)
+
+    def test_ragged_prefill_masks_padding(self):
+        """Right-padded batched prefill == per-sequence exact prefill at
+        each sequence's own last position (attention-family arch)."""
+        cfg = _cfg("llama3.2-1b")
+        params = dec.init_model(cfg, KEY)
+        lens = [5, 9]
+        S = max(lens)
+        toks = jax.random.randint(KEY, (2, S), 0, cfg.vocab)
+        cache = dec.init_cache(cfg, 2, 32, dtype=jnp.float32)
+        lg, cache = dec.prefill(params, cfg, toks, cache,
+                                lengths=jnp.asarray(lens),
+                                compute_dtype=jnp.float32)
+        for b, ln in enumerate(lens):
+            solo = dec.init_cache(cfg, 1, 32, dtype=jnp.float32)
+            lg_solo, _ = dec.prefill(params, cfg, toks[b:b + 1, :ln], solo,
+                                     compute_dtype=jnp.float32)
+            np.testing.assert_allclose(
+                np.asarray(lg[b, ln - 1]), np.asarray(lg_solo[0, -1]),
+                atol=1e-4, rtol=1e-4)
+
+
+class TestDecodeLoop:
+    def test_loop_matches_stepping(self):
+        """The fused lax.scan loop emits exactly the tokens the per-token
+        host loop would."""
+        cfg = _cfg("llama3.2-1b")
+        params = dec.init_model(cfg, KEY)
+        B, S, gen = 2, 6, 5
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        cache = dec.init_cache(cfg, B, 32, dtype=jnp.float32)
+        lg, cache = dec.prefill(params, cfg, toks, cache,
+                                compute_dtype=jnp.float32)
+        tok = jnp.argmax(lg[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+
+        # reference: python loop
+        ref, rtok, rcache = [], tok, cache
+        for i in range(gen):
+            ref.append(np.asarray(rtok[:, 0]))
+            lgs, rcache = dec.decode_step(params, cfg, rtok, rcache,
+                                          jnp.int32(S + i),
+                                          compute_dtype=jnp.float32)
+            rtok = jnp.argmax(lgs[:, :, :cfg.vocab], -1).astype(jnp.int32)
+        want = np.stack(ref, 1)
+        got, _, _ = dec.decode_loop(params, cfg, tok, cache, jnp.int32(S),
+                                    gen, compute_dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+class TestServeEndToEnd:
+    def test_serve_paged_equals_dense_tokens(self):
+        from repro.launch.serve import serve
+
+        a = serve("llama3.2-1b", reduced=True, batch=2, prompt_len=8, gen=6,
+                  cache_len=32)
+        b = serve("llama3.2-1b", reduced=True, batch=2, prompt_len=8, gen=6,
+                  cache_len=32, kv_impl="paged", page_size=4)
+        assert a["tokens"] == b["tokens"]
+        assert a["tokens_in_vocab"] and b["tokens_in_vocab"]
+        assert b["kv_bytes_per_token"] < a["kv_bytes_per_token"]
+
+    def test_serve_paged_rejects_capacity_overflow(self):
+        """The pool does not ring-wrap: generating past cache_len must be
+        an error, not silently dropped KV."""
+        from repro.launch.serve import serve
+
+        with pytest.raises(ValueError, match="paged serve"):
+            serve("llama3.2-1b", reduced=True, batch=2, prompt_len=8,
+                  gen=32, cache_len=32, kv_impl="paged", page_size=4)
+
+    def test_serve_continuous_recycles_pages(self):
+        from repro.launch.serve import serve_continuous
+
+        out = serve_continuous(
+            "llama3.2-1b", slots=3, page_size=4, decode_chunk=4,
+            requests=[(5, 4), (9, 6), (3, 5), (12, 4), (7, 3)],
+            num_pages=12,  # oversubscribed: forces admit to wait on evict
+        )
+        assert out["generated"] == [4, 6, 5, 4, 3]
+        assert out["tokens_in_vocab"]
+        assert out["pool_conserved"]
+        assert out["kv_bytes_per_token_paged"] < out["kv_bytes_per_token_dense"]
+        # pin every request's tokens against a solo dense-cache reference
+        # (same prompt construction as serve_continuous) — a page-recycle
+        # or length-mirroring bug would corrupt these, not just counts
+        cfg = get_config("llama3.2-1b", reduced=True)
+        key = jax.random.PRNGKey(0)
+        params = dec.init_model(cfg, key)
+        for rid, (plen, g) in enumerate([(5, 4), (9, 6), (3, 5), (12, 4),
+                                         (7, 3)]):
+            prompt = jax.random.randint(jax.random.fold_in(key, 1000 + rid),
+                                        (1, plen), 0, cfg.vocab)
+            cache = dec.init_cache(cfg, 1, 64, dtype=jnp.float32)
+            lg, cache = dec.prefill(params, cfg, prompt, cache,
+                                    compute_dtype=jnp.float32)
+            tok = jnp.argmax(lg[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+            want, _, _ = dec.decode_loop(params, cfg, tok, cache,
+                                         jnp.int32(plen), g,
+                                         compute_dtype=jnp.float32)
+            assert out["tokens"][rid] == np.asarray(want)[0].tolist()
+
+    def test_serve_continuous_rejects_oversize_request(self):
+        from repro.launch.serve import serve_continuous
+
+        with pytest.raises(RuntimeError, match="pages_per_seq"):
+            serve_continuous("llama3.2-1b", slots=2, page_size=8,
+                             decode_chunk=4, requests=[(40, 10)],
+                             max_seq_len=32)
+
+
+class TestPagePoolInvariants:
+    def _check(self, pool: PagePool):
+        owned = [list(pool.owned_pages(s)) for s in range(pool.slots)]
+        flat = [p for o in owned for p in o]
+        # no page shared by two live sequences; scratch page never owned
+        assert len(flat) == len(set(flat))
+        assert 0 not in flat
+        # free list conserved across admit/evict
+        assert pool.free_pages + len(flat) == pool.num_pages - 1
+        # live table rows point at the owned pages, in logical order
+        for s, o in enumerate(owned):
+            assert list(pool.table[s, :len(o)]) == o
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_random_admit_grow_evict(self, seed):
+        import random
+
+        rng = random.Random(seed)
+        slots, ps, pps = rng.randint(1, 4), rng.choice([2, 4, 8]), 8
+        pool = PagePool(rng.randint(4, 40), ps, slots, pps)
+        live: dict[int, int] = {}
+        for _ in range(30):
+            op = rng.random()
+            s = rng.randrange(slots)
+            if op < 0.45 and s not in live:
+                want = rng.randint(1, ps * pps)
+                if pool.can_admit(want):
+                    pool.admit(s, want)
+                    live[s] = want
+            elif op < 0.7 and s in live:
+                want = min(ps * pps, live[s] + rng.randint(0, 2 * ps))
+                try:
+                    pool.grow(s, want)
+                    live[s] = max(live[s], want)
+                except MemoryError:
+                    pass  # exhausted pool keeps prior state — still valid
+            elif s in live:
+                pool.evict(s)
+                del live[s]
+            self._check(pool)
+        for s in list(live):
+            pool.evict(s)
+        self._check(pool)
+        assert pool.free_pages == pool.num_pages - 1
+
+    def test_double_admit_rejected(self):
+        pool = PagePool(8, 4, 2, 4)
+        pool.admit(0, 6)
+        with pytest.raises(ValueError):
+            pool.admit(0, 4)
+
+    def test_exhaustion_raises(self):
+        pool = PagePool(4, 4, 2, 4)  # 3 allocatable pages
+        pool.admit(0, 12)
+        with pytest.raises(MemoryError):
+            pool.admit(1, 8)
+
+
+class TestKVBytesAccounting:
+    def test_paged_charges_used_pages_not_max_len(self):
+        cfg = get_config("llama3.2-1b", reduced=True)
+        dense = kv_read_bytes_per_token(cfg, 8, cache_len=4096)
+        paged = kv_read_bytes_per_token(cfg, 8, cache_len=4096, page_size=16)
+        assert paged < dense
+        # one page of 16 positions vs the 4096-slot ring
+        assert paged == pytest.approx(dense * 16 / 4096)
+
+    def test_window_caps_both_layouts(self):
+        cfg = get_config("gemma2-2b", reduced=True)  # window=32 + global
+        near_full = kv_read_bytes_per_token(cfg, 4000, cache_len=4096,
+                                            page_size=16)
+        dense = kv_read_bytes_per_token(cfg, 4000, cache_len=4096)
+        # the window layer reads ~32 positions in both; the global layer
+        # dominates and pages≈ring at full occupancy
+        assert near_full <= dense * 1.1
+
+    def test_profile_arch_decode_mode(self):
+        from repro.core import default_fleet
+
+        fleet = default_fleet()
+        base = profile_arch("llama3.2-1b", fleet)
+        dense = profile_arch("llama3.2-1b", fleet, decode_kv_len=8,
+                             kv_cache_len=4096)
+        paged = profile_arch("llama3.2-1b", fleet, decode_kv_len=8,
+                             kv_cache_len=4096, kv_page_size=16)
+        # decode mode adds KV read traffic to the attention rows, and the
+        # paged accounting charges (far) less of it at short lengths
+        att = next(i for i, p in enumerate(base) if p.kind == "attention")
+        assert dense[att].input_bytes > paged[att].input_bytes
+        assert paged[att].input_bytes > base[att].input_bytes
