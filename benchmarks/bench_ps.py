@@ -35,6 +35,7 @@ except ImportError:   # direct `python benchmarks/bench_ps.py` run
     from common import emit
 
 from repro.ps import CTRConfig, ShardedTable, make_step_fn, make_table, train_ctr_ps
+from repro.ps.workload import train_ctr_elastic
 
 #: steady-state window: drop the leading fraction (jit compile, cold
 #: queues, first tier re-pin) before measuring step rate
@@ -120,6 +121,58 @@ def bench_overlap(*, cfg: CTRConfig, steps: int, shards: int,
     return speedup
 
 
+def _post_event_rate(summary: dict, event_step: int) -> float:
+    """Steady step rate over the window after ``event_step`` (plus a 10%
+    settle margin) — the post-join / post-recovery regime."""
+    ts = summary["step_ts"]
+    w = min(len(ts) - 2, event_step + max(1, int(len(ts) * 0.1)))
+    return (len(ts) - 1 - w) / max(ts[-1] - ts[w], 1e-9)
+
+
+def bench_elastic(*, cfg: CTRConfig, steps: int, shards: int,
+                  tag: str) -> float:
+    """Elastic fleet scenarios: join mid-run and kill+recover mid-run,
+    gated on steady-state throughput parity (≥0.9×) vs the same fleet
+    left static, with migration/recovery times emitted.  Returns the
+    worst parity ratio."""
+    event_step = steps // 3
+    common = dict(steps=steps, num_shards=shards, optimizer="sgd",
+                  mode="sync")
+    static = train_ctr_elastic(cfg, **common)
+    base_rate = _post_event_rate(static, event_step)
+    emit(f"ps_elastic_static_step{tag}", 1e6 / base_rate,
+         f"{base_rate:.1f}steps/s")
+
+    join = train_ctr_elastic(cfg, **common,
+                             events=[(event_step, "join", None)])
+    join_rate = _post_event_rate(join, event_step)
+    join_parity = join_rate / base_rate
+    emit(f"ps_elastic_join_time{tag}", join["join_seconds"] * 1e6,
+         f"live slab migration to the joining shard")
+    emit(f"ps_elastic_join_parity{tag}", 1e6 / join_rate,
+         f"{join_parity:.2f}x of static (target >=0.9x)")
+
+    kill = train_ctr_elastic(cfg, **common,
+                             events=[(event_step, "kill", 0)])
+    kill_rate = _post_event_rate(kill, event_step)
+    kill_parity = kill_rate / base_rate
+    emit(f"ps_elastic_recovery_time{tag}", kill["recovery_seconds"] * 1e6,
+         f"replica promotion + re-replication after shard kill")
+    emit(f"ps_elastic_kill_parity{tag}", 1e6 / kill_rate,
+         f"{kill_parity:.2f}x of static (target >=0.9x)")
+    # sync replication + deterministic PS optimizer: the interrupted run's
+    # loss trajectory must match the static run's exactly
+    drift = max(abs(a - b) for a, b in zip(static["losses"],
+                                           kill["losses"]))
+    emit(f"ps_elastic_lossless{tag}", drift * 1e6,
+         f"max |loss drift| vs uninterrupted run = {drift:.2e}")
+    if drift > 1e-6:
+        raise RuntimeError(
+            f"kill-recovery loss trajectory drifted by {drift:.3e} "
+            f"from the uninterrupted run")
+    return min(join_parity, kill_parity)
+
+
 def run(smoke: bool = False, comm_ratio: float = 2.0) -> None:
     if smoke:
         # keep the full-size model (its compute:push balance is what makes
@@ -158,6 +211,20 @@ def run(smoke: bool = False, comm_ratio: float = 2.0) -> None:
         # accounting catches it; still exits nonzero under direct runs
         raise RuntimeError(
             f"async overlap speedup {speedup:.2f}x below the 1.3x target")
+
+    # elastic fleet: join + kill/recovery mid-training, parity-gated
+    # against the static fleet (one retry absorbs shared-box noise)
+    elastic_steps = max(30, steps // 2)
+    parity = 0.0
+    for tag in ("_elastic", "_elastic_retry"):
+        parity = bench_elastic(cfg=cfg, steps=elastic_steps, shards=3,
+                               tag=tag)
+        if parity >= 0.9:
+            break
+    if parity < 0.9:
+        raise RuntimeError(
+            f"elastic fleet steady-state throughput {parity:.2f}x of the "
+            f"static fleet, below the 0.9x target")
 
 
 def main() -> None:

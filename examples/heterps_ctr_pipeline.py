@@ -21,6 +21,24 @@ log with:
 Trains ~65M parameters for a few hundred steps; logloss decreases.
 
 Run:  PYTHONPATH=src python examples/heterps_ctr_pipeline.py [--steps 300]
+
+The PS-focused slice of this stack (without the pipeline) also runs via
+the launcher's ``--sparse-ps`` mode, which now fronts the *elastic*
+multi-process fleet:
+
+  PYTHONPATH=src python -m repro.launch.train --sparse-ps \
+      --ps-transport multiproc      # real shard worker processes \
+      --ps-optimizer adagrad        # PS-hosted adaptive optimizer \
+      --ps-event 100:join --ps-event 200:kill:0   # elasticity faults
+
+``--ps-transport inproc`` (default) keeps every shard in-process and
+bit-exact vs the oracle; ``multiproc`` spawns one numpy-only worker per
+shard behind pipes.  With ``--ps-optimizer`` other than ``none`` the
+shards apply sgd/adagrad/adam themselves from deduped raw gradients
+(one update per row per step), replicate synchronously, and survive
+``--ps-event STEP:kill:SHARD`` fault injection losslessly — the loss
+trajectory matches the uninterrupted run exactly (see DESIGN.md,
+"Multi-process elastic PS").
 """
 
 import argparse

@@ -40,8 +40,17 @@ from repro.models.profile import kv_read_bytes_per_token
 def serve(arch: str, *, reduced: bool = True, batch: int = 4,
           prompt_len: int = 32, gen: int = 16, cache_len: int = 128,
           seed: int = 0, compute_dtype=jnp.float32, kv_impl: str = "dense",
-          page_size: int = 16, decode_chunk: int | None = None) -> dict:
-    """Fixed-batch serve: batched prefill + chunked on-device decode."""
+          page_size: int = 16, decode_chunk: int | None = None,
+          temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+          sample_seed: int | None = None) -> dict:
+    """Fixed-batch serve: batched prefill + chunked on-device decode.
+
+    ``temperature=0`` (default) decodes greedily.  Any positive
+    temperature samples every token (including the first, drawn from the
+    prefill logits) through ``models.decoder.sample_logits`` with
+    ``top_k``/``top_p`` truncation; the PRNG key derives from
+    ``sample_seed`` (default: ``seed``), so a fixed seed reproduces the
+    same tokens exactly."""
     cfg = get_config(arch, reduced=reduced)
     if cfg.kv_impl != kv_impl:
         cfg = dataclasses.replace(cfg, kv_impl=kv_impl)
@@ -67,26 +76,47 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     jax.block_until_ready(logits)
     prefill_s = time.time() - t0
 
-    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+    sampling = temperature > 0.0
+    if sampling:
+        skey = jax.random.PRNGKey(seed if sample_seed is None
+                                  else sample_seed)
+        kfirst, kloop = jax.random.split(skey)
+        first = jax.jit(lambda lg, k: dec.sample_logits(
+            lg, k, temperature=temperature, top_k=top_k, top_p=top_p))
+        tok = first(logits[:, -1, : cfg.vocab], kfirst)[:, None]
+    else:
+        tok = jnp.argmax(logits[:, -1:, : cfg.vocab],
+                         axis=-1).astype(jnp.int32)
     chunk = min(decode_chunk or gen, gen)
-    loop_jit = jax.jit(
-        lambda p, t, c, i: dec.decode_loop(p, cfg, t, c, i, chunk,
-                                           compute_dtype=compute_dtype)
-    )
+    if sampling:
+        loop_jit = jax.jit(
+            lambda p, t, c, i, k: dec.decode_loop(
+                p, cfg, t, c, i, chunk, compute_dtype=compute_dtype,
+                key=k, temperature=temperature, top_k=top_k, top_p=top_p)
+        )
+        chunk_key = lambda n: jax.random.fold_in(kloop, n)  # noqa: E731
+    else:
+        loop_jit = jax.jit(
+            lambda p, t, c, i, k: dec.decode_loop(
+                p, cfg, t, c, i, chunk, compute_dtype=compute_dtype)
+        )
+        chunk_key = lambda n: jnp.zeros((2,), jnp.uint32)  # noqa: E731
     # warm the scan program (functional: the discarded chunk leaves tok /
     # cache untouched) so decode_s measures steady-state throughput
     t0 = time.time()
     jax.block_until_ready(
-        loop_jit(params, tok, cache, jnp.int32(prompt_len))[0])
+        loop_jit(params, tok, cache, jnp.int32(prompt_len), chunk_key(0))[0])
     compile_s = time.time() - t0
     outs = []
     t0 = time.time()
-    done, idx = 0, prompt_len
+    done, idx, n_chunk = 0, prompt_len, 0
     while done < gen:
-        toks, tok, cache = loop_jit(params, tok, cache, jnp.int32(idx))
+        toks, tok, cache = loop_jit(params, tok, cache, jnp.int32(idx),
+                                    chunk_key(n_chunk))
         outs.append(np.asarray(toks))       # one transfer per chunk
         done += chunk
         idx += chunk
+        n_chunk += 1
     decode_s = time.time() - t0
     out = np.concatenate(outs, axis=1)[:, :gen]
 
@@ -97,6 +127,11 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
         "tokens_in_vocab": bool((out >= 0).all() and (out < cfg.vocab).all()),
         "prefill_s": prefill_s, "decode_s": decode_s,
         "decode_compile_s": compile_s,
+        "sampling": ({"temperature": temperature, "top_k": top_k,
+                      "top_p": top_p,
+                      "sample_seed": seed if sample_seed is None
+                      else sample_seed}
+                     if sampling else None),
         "decode_tok_per_s": batch * gen / max(decode_s, 1e-9),
         "kv_impl": kv_impl,
         "kv_bytes_per_token": kv_read_bytes_per_token(
@@ -271,7 +306,16 @@ def main() -> None:
     ap.add_argument("--kv-impl", choices=("dense", "paged"), default="dense")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching loop over a skewed request "
-                         "mix (always paged)")
+                         "mix (always paged, greedy)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy decode)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--sample-seed", type=int, default=None,
+                    help="PRNG seed for sampling (default: --seed's value; "
+                         "fixed seed => reproducible tokens)")
     args = ap.parse_args()
     if args.continuous:
         out = serve_continuous(args.arch, reduced=args.reduced,
@@ -279,7 +323,9 @@ def main() -> None:
     else:
         out = serve(args.arch, reduced=args.reduced, batch=args.batch,
                     prompt_len=args.prompt_len, gen=args.gen,
-                    kv_impl=args.kv_impl)
+                    kv_impl=args.kv_impl, temperature=args.temperature,
+                    top_k=args.top_k, top_p=args.top_p,
+                    sample_seed=args.sample_seed)
     print(json.dumps(out, indent=2))
 
 

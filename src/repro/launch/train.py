@@ -79,22 +79,56 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
 def train_sparse_ps(*, steps: int, batch: int | None = None,
                     lr: float | None = None, num_shards: int = 4,
                     sync: bool = False, partition: str = "mod",
-                    repin_interval: int = 50, log_every: int = 10) -> dict:
+                    repin_interval: int = 50, log_every: int = 10,
+                    transport: str | None = None,
+                    optimizer: str = "none",
+                    events: list[tuple[int, str, int | None]] | None = None,
+                    staleness_bound: int = 8) -> dict:
     """The ``--sparse-ps`` path: reduced CTR model over the sharded PS
     (``repro.ps``) — async double-buffered pull/push unless ``sync``.
-    ``batch``/``lr`` default to the CTR workload's own values."""
+    ``batch``/``lr`` default to the CTR workload's own values.
+
+    ``transport`` picks the PS backend (``inproc`` | ``multiproc``).
+    ``optimizer="none"`` (default) keeps the static :class:`ShardedTable`
+    with client-side SGD — the bit-exact oracle path; any other value
+    (``sgd``/``adagrad``/``adam``) trains over the **elastic fleet** with
+    the optimizer hosted on the PS shards, and ``events`` scripts fleet
+    changes mid-run (see :func:`repro.ps.workload.train_ctr_elastic`).
+    """
     import dataclasses
 
-    from repro.ps import CTRConfig, train_ctr_ps
+    from repro.ps.workload import CTRConfig, train_ctr_elastic, train_ctr_ps
 
     cfg = CTRConfig()
     overrides = {k: v for k, v in (("batch", batch), ("lr", lr))
                  if v is not None}
     cfg = dataclasses.replace(cfg, **overrides)
+    if optimizer != "none" or events:
+        return train_ctr_elastic(
+            cfg, steps=steps, num_shards=num_shards,
+            optimizer=optimizer if optimizer != "none" else "sgd",
+            transport=transport, mode="sync" if sync else "async",
+            events=events, staleness_bound=staleness_bound,
+            log_every=log_every)
     return train_ctr_ps(cfg, steps=steps, num_shards=num_shards,
                         mode="sync" if sync else "async",
                         partition=partition, repin_interval=repin_interval,
-                        log_every=log_every)
+                        log_every=log_every, transport=transport)
+
+
+def _parse_ps_events(specs: list[str]) -> list[tuple[int, str, int | None]]:
+    """``STEP:ACTION[:SHARD]`` → scripted fleet events, e.g.
+    ``40:join`` / ``80:kill:0`` / ``120:leave:1``."""
+    events = []
+    for spec in specs:
+        parts = spec.split(":")
+        if len(parts) not in (2, 3) or parts[1] not in ("join", "kill",
+                                                        "leave"):
+            raise SystemExit(f"bad --ps-event {spec!r} "
+                             f"(want STEP:join|kill|leave[:SHARD])")
+        events.append((int(parts[0]), parts[1],
+                       int(parts[2]) if len(parts) == 3 else None))
+    return events
 
 
 def main() -> None:
@@ -117,14 +151,34 @@ def main() -> None:
     ap.add_argument("--ps-sync", action="store_true",
                     help="synchronous pull→compute→push (no overlap)")
     ap.add_argument("--ps-partition", choices=("mod", "block"), default="mod")
+    ap.add_argument("--ps-transport", choices=("inproc", "multiproc"),
+                    default=None,
+                    help="PS backend: in-process queues (default) or one "
+                         "worker process per shard")
+    ap.add_argument("--ps-optimizer",
+                    choices=("none", "sgd", "adagrad", "adam"),
+                    default="none",
+                    help="PS-hosted optimizer; any value but 'none' trains "
+                         "over the elastic fleet")
+    ap.add_argument("--ps-event", action="append", default=[],
+                    metavar="STEP:ACTION[:SHARD]",
+                    help="scripted elastic fleet event, repeatable — e.g. "
+                         "'40:join', '80:kill:0', '120:leave:1'")
+    ap.add_argument("--ps-staleness-bound", type=int, default=8,
+                    help="max updates a pull may miss during live "
+                         "migration (0 = full dual-write)")
     args = ap.parse_args()
     if args.sparse_ps:
         summary = train_sparse_ps(
             steps=args.steps, batch=args.batch, lr=args.lr,
             num_shards=args.ps_shards, sync=args.ps_sync,
-            partition=args.ps_partition)
+            partition=args.ps_partition, transport=args.ps_transport,
+            optimizer=args.ps_optimizer,
+            events=_parse_ps_events(args.ps_event),
+            staleness_bound=args.ps_staleness_bound)
         summary.pop("step_times", None)
         summary.pop("step_ts", None)
+        summary.pop("losses", None)
     else:
         summary = train(args.arch, reduced=args.reduced, steps=args.steps,
                         batch=args.batch if args.batch is not None else 8,

@@ -680,9 +680,40 @@ def prefill(params, cfg: ArchConfig, tokens, cache, *, lengths=None,
     return logits, new_cache
 
 
+def sample_logits(logits, key, *, temperature: float = 1.0,
+                  top_k: int = 0, top_p: float = 1.0):
+    """Sample next tokens from ``logits (..., V)`` → int32 ``(...)``.
+
+    Standard filtered-softmax sampling: logits are divided by
+    ``temperature``, truncated to the ``top_k`` highest (0 = off) and to
+    the smallest prefix whose probability mass reaches ``top_p``
+    (1.0 = off; the argmax token is always kept), then drawn via
+    ``jax.random.categorical``.  Filters compose (top-k first, then
+    top-p over what survives).  ``temperature``/``top_k``/``top_p`` are
+    static — bake them into the jitted caller."""
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32) / jnp.float32(max(temperature, 1e-6))
+    if top_k and 0 < top_k < V:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    if top_p < 1.0:
+        desc = jnp.sort(lg, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(desc, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep tokens whose preceding cumulative mass is < top_p (the
+        # first is always kept: its preceding mass is 0)
+        keep = (cum - probs) < top_p
+        thresh = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1,
+                         keepdims=True)
+        lg = jnp.where(lg < thresh, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
 def decode_loop(params, cfg: ArchConfig, token, cache, index, steps: int, *,
-                compute_dtype=jnp.bfloat16):
-    """``steps`` greedy decode iterations as one ``lax.scan`` program —
+                compute_dtype=jnp.bfloat16, key=None,
+                temperature: float = 1.0, top_k: int = 0,
+                top_p: float = 1.0):
+    """``steps`` decode iterations as one ``lax.scan`` program —
     generated tokens accumulate ON DEVICE and transfer once, instead of a
     jit dispatch + host sync per token.
 
@@ -690,18 +721,31 @@ def decode_loop(params, cfg: ArchConfig, token, cache, index, steps: int, *,
     token emitted, matching the serve convention that the argmax of the
     prefill logits is the first generated token).  ``index`` is the
     scalar start position for a dense cache (ignored by paged caches).
-    Returns (tokens (B, steps), next_token (B, 1), cache)."""
+
+    ``key=None`` (default) decodes greedily — bit-identical to the
+    pre-sampling loop.  With a PRNG key, each step draws from
+    :func:`sample_logits` under ``temperature``/``top_k``/``top_p``
+    (static args), splitting the key per step — fixed key ⇒ fixed
+    tokens.  Returns (tokens (B, steps), next_token (B, 1), cache)."""
     V = cfg.vocab
+    greedy = key is None
 
     def body(carry, _):
-        tok, cache, idx = carry
+        tok, cache, idx, k = carry
         logits, cache = decode_step(params, cfg, tok, cache, idx,
                                     compute_dtype=compute_dtype)
-        ntok = jnp.argmax(logits[:, :, :V], axis=-1).astype(jnp.int32)
-        return (ntok, cache, idx + 1), tok[:, 0]
+        if greedy:
+            ntok = jnp.argmax(logits[:, :, :V], axis=-1).astype(jnp.int32)
+        else:
+            k, sub = jax.random.split(k)
+            ntok = sample_logits(logits[:, -1, :V], sub,
+                                 temperature=temperature, top_k=top_k,
+                                 top_p=top_p)[:, None]
+        return (ntok, cache, idx + 1, k), tok[:, 0]
 
-    (ntok, cache, _), toks = jax.lax.scan(
-        body, (token, cache, jnp.asarray(index, jnp.int32)), None,
+    k0 = jax.random.PRNGKey(0) if greedy else key
+    (ntok, cache, _, _), toks = jax.lax.scan(
+        body, (token, cache, jnp.asarray(index, jnp.int32), k0), None,
         length=steps)
     return jnp.moveaxis(toks, 0, 1), ntok, cache
 

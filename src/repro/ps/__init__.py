@@ -1,28 +1,57 @@
 """Sharded parameter-server subsystem (HeterPS §3).
 
 ``ShardedTable`` vocab-partitions sparse embedding tables across PS
-shards with jit-compatible routed pull/push; ``PSClient`` overlaps the
-pulls/pushes with compute (double-buffered); ``TierPlacer`` re-pins hot
-rows from the access monitor's decisions; ``PSTelemetry`` meters
-per-shard traffic and feeds it back to the cost model.
+shards behind a pluggable ``Transport`` (in-process queues or real
+worker processes); ``ElasticPSFleet`` makes the shard set elastic —
+join/leave/kill with live migration and replica recovery; ``PSClient``
+overlaps the pulls/pushes with compute (double-buffered); ``TierPlacer``
+re-pins hot rows from the access monitor's decisions; ``PSTelemetry``
+meters per-shard traffic and feeds it back to the cost model.
+
+Exports resolve lazily (PEP 562): a spawned shard worker process imports
+``repro.ps.server`` through this package, and must get the numpy-only
+event loop without paying the jax import the client-side modules need.
 """
 
-from repro.ps.client import PSClient
-from repro.ps.placement import TierPlacer
-from repro.ps.sharding import (
-    RoutingSpec, ShardedTable, sharded_pull, sharded_update,
-    TIER_DEVICE, TIER_HOST, TIER_DISK,
-)
-from repro.ps.telemetry import PSTelemetry, ShardCounters
-from repro.ps.workload import (
-    CTRConfig, click_stream, init_tower, make_step_fn, make_table,
-    train_ctr_ps,
-)
+_EXPORTS = {
+    "PSClient": "repro.ps.client",
+    "TierPlacer": "repro.ps.placement",
+    "RoutingSpec": "repro.ps.sharding",
+    "ShardedTable": "repro.ps.sharding",
+    "sharded_pull": "repro.ps.sharding",
+    "sharded_update": "repro.ps.sharding",
+    "TIER_DEVICE": "repro.ps.sharding",
+    "TIER_HOST": "repro.ps.sharding",
+    "TIER_DISK": "repro.ps.sharding",
+    "PSTelemetry": "repro.ps.telemetry",
+    "ShardCounters": "repro.ps.telemetry",
+    "CTRConfig": "repro.ps.workload",
+    "click_stream": "repro.ps.workload",
+    "init_tower": "repro.ps.workload",
+    "make_step_fn": "repro.ps.workload",
+    "make_table": "repro.ps.workload",
+    "train_ctr_ps": "repro.ps.workload",
+    "Transport": "repro.ps.transport",
+    "InProcTransport": "repro.ps.transport",
+    "MultiprocTransport": "repro.ps.transport",
+    "make_transport": "repro.ps.transport",
+    "PSShardError": "repro.ps.transport",
+    "PSShardLost": "repro.ps.transport",
+    "ShardServer": "repro.ps.server",
+    "ElasticPSFleet": "repro.ps.elastic",
+    "BucketSpec": "repro.ps.elastic",
+}
 
-__all__ = [
-    "PSClient", "TierPlacer", "RoutingSpec", "ShardedTable",
-    "sharded_pull", "sharded_update", "TIER_DEVICE", "TIER_HOST",
-    "TIER_DISK", "PSTelemetry", "ShardCounters", "CTRConfig",
-    "click_stream", "init_tower", "make_step_fn", "make_table",
-    "train_ctr_ps",
-]
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -57,6 +57,7 @@ class PSClient:
         self.steps_pulled = 0
         self.steps_pushed = 0
         self._pushes_enqueued = 0
+        self._pushes_dropped = 0
         self._pusher_error: BaseException | None = None
         self._puller_error: BaseException | None = None
 
@@ -163,19 +164,28 @@ class PSClient:
     # --- lifecycle ---------------------------------------------------------
     def close(self, *, drain: bool = True, timeout: float = 10.0) -> None:
         """Stop both threads; with ``drain`` (default) queued pushes are
-        applied first so the table reflects every ``push()`` call."""
+        applied first so the table reflects every ``push()`` call.
+
+        Idempotent and deterministic even when the drain fails: a second
+        ``close()`` is a no-op, and the failure paths (drain timeout /
+        pusher thread died) re-raise with the number of dropped pushes —
+        also recorded as ``pushes_dropped`` in :meth:`stats`, so the
+        counters stay consistent (``pushed + dropped == enqueued``)."""
         if self._closed:
             return
         self._closed = True
+        drain_error: BaseException | None = None
         try:
             if drain and self._pusher_error is None:
                 self.flush(timeout=timeout)
+        except (TimeoutError, RuntimeError) as e:
+            drain_error = e
         finally:
             # even if the drain raised, stop both threads — a failed close
             # must not leave the puller/pusher running against the table
             self._stop.set()
-            # wake the pusher; drop a stale (unapplied, drain=False) push
-            # to make room if the queue is full
+            # wake the pusher; drop a stale (unapplied) push to make room
+            # if the queue is full
             while True:
                 try:
                     self._push_q.put(_STOP, timeout=self._put_timeout)
@@ -187,12 +197,28 @@ class PSClient:
                         pass
             self._puller.join(timeout)
             self._pusher.join(timeout)
+        with self._lock:
+            self._pushes_dropped = max(
+                0, self._pushes_enqueued - self.steps_pushed)
+            dropped = self._pushes_dropped
         # a pusher failure means queued gradients were dropped — surface it
         # even when the training loop already issued its last push()
-        self._raise_pusher_error()
+        if self._pusher_error is not None:
+            raise RuntimeError(
+                f"PS push failed: {dropped} push(es) dropped"
+            ) from self._pusher_error
+        if drain_error is not None:
+            if isinstance(drain_error, TimeoutError):
+                raise TimeoutError(
+                    f"PS push queue did not drain: {dropped} push(es) "
+                    f"dropped") from drain_error
+            raise RuntimeError(
+                f"pusher thread exited with pushes pending: {dropped} "
+                f"push(es) dropped") from drain_error
 
     def stats(self) -> dict:
         with self._lock:
             return {"steps_pulled": self.steps_pulled,
                     "steps_pushed": self.steps_pushed,
-                    "pushes_enqueued": self._pushes_enqueued}
+                    "pushes_enqueued": self._pushes_enqueued,
+                    "pushes_dropped": self._pushes_dropped}

@@ -3,34 +3,37 @@
 The paper keeps huge sparse embedding tables on CPU parameter servers and
 shards them across hosts; workers pull only the touched rows and push
 sparse row gradients back.  :class:`ShardedTable` vocab-partitions one
-logical ``(V, D)`` table across ``N`` PS shards:
+logical ``(V, D)`` table across ``N`` PS shards and **speaks the message
+protocol** of :mod:`repro.ps.server` to them through a pluggable
+:class:`~repro.ps.transport.Transport`:
 
-* storage is one ``(V, D)`` array in *shard-major* layout — shard ``s``'s
-  rows form the contiguous slab ``[offset_s, offset_s + rows_s)``.  On
-  real hardware that slab layout is exactly what a ``NamedSharding`` over
-  a PS mesh axis consumes (one slab per host); on the CPU container the
-  slabs are process-local.  Keeping one array makes routed ``pull`` a
-  single gather and routed ``push`` a single COO scatter-add — O(ids),
-  independent of the shard count;
-* pushes dedup duplicate ids via ``dedup_rows`` before the scatter so an
-  adaptive optimizer on the PS sees each row once per step;
-* tier-aware placement is *physical*: a fixed-capacity **hot-row cache**
-  (``hot_rows`` + an id→slot map) holds the rows the access monitor
-  marked DEVICE-tier.  Pulls serve hot ids from the cache and cold ids
-  from main storage; pushes write through to both, so the two stay
+* each shard is an endpoint owning one slab bucket — a
+  :class:`~repro.ps.server.ShardServer` behind an in-process queue
+  (default: deterministic, the tests/CI oracle path) or a real worker
+  process (:class:`~repro.ps.transport.MultiprocTransport`);
+* ``pull`` routes ids to their owners client-side, fans the per-shard
+  requests out in one ``request_many`` round, and reassembles the rows
+  in id order; ``push`` dedups duplicate ids via ``dedup_rows`` and
+  pre-scales the update **client-side in jnp** (``-lr * summed_grads``),
+  so the shard's f32 ``+=`` lands bit-identically to the single-table
+  XLA scatter-add of the pre-refactor oracle (pinned in
+  ``tests/test_ps.py`` / ``tests/test_ps_transport.py``);
+* tier-aware placement stays **client-side**: a fixed-capacity
+  **hot-row cache** (``hot_rows`` + an id→slot map) holds the rows the
+  access monitor marked DEVICE-tier.  Pulls merge hot rows over the
+  transport's cold rows; pushes write through to both, so the two stay
   bit-identical.  On TPU runtimes the cache lives in HBM
-  (``memory_kind="device"``) while main storage is demoted to
-  ``pinned_host``; on CPU both are plain arrays and the per-shard
-  ``tiers`` codes simulate the storage tiers;
+  (``memory_kind="device"``); shard slabs are the host/remote tier;
 * every pull/push is metered per shard (bytes, rows, wall time) by an
-  attached :class:`~repro.ps.telemetry.PSTelemetry`, and an optional
-  simulated RPC latency models the worker↔PS network hop the CPU
-  container doesn't have.
+  attached :class:`~repro.ps.telemetry.PSTelemetry` — with a real
+  transport the timings now include the actual IPC hop; an optional
+  simulated RPC latency still models a slower network on top.
 
-Routing is bit-exact against the single-shard oracle
-(:class:`repro.parallel.ps.SparseEmbedding`): a row lives in exactly one
-slab slot, so its scatter contributions arrive in the same stream order
-as in the unsharded table (pinned by ``tests/test_ps.py``).
+The pre-refactor fused jnp kernels (:func:`sharded_pull`,
+:func:`sharded_update` over one shard-major storage array) are kept
+below as the reference implementation the message path is equivalence-
+pinned against.  For elastic fleets (shards joining/leaving at runtime,
+replicas, PS-hosted optimizers) see :mod:`repro.ps.elastic`.
 """
 
 from __future__ import annotations
@@ -45,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.parallel.ps import dedup_rows
+from repro.ps.transport import Transport, make_transport
 
 #: tier codes stored in the per-shard placement arrays (int8); index-aligned
 #: with ``repro.data.cache.Tier`` ordering DEVICE < HOST < DISK.
@@ -121,15 +125,18 @@ class RoutingSpec:
         return np.arange(lo, lo + self.shard_rows[shard])
 
 
+# --------------------------------------------------------------------------
+# reference jnp kernels (pre-refactor single-array path — the oracle the
+# message path is pinned against, and still the fused TPU formulation)
+# --------------------------------------------------------------------------
+
+
 @functools.partial(jax.jit, static_argnames=("spec",))
 def sharded_pull(data, hot_rows, slot_of, ids, *, spec: RoutingSpec):
-    """Routed pull: hot ids from the cache, cold ids from main storage.
-
-    ``data`` is the shard-major ``(V, D)`` storage; ``hot_rows``/
-    ``slot_of`` the placement cache (``slot_of[i] < 0`` → cold).  Values
-    are identical either way (write-through invariant), so the result is
-    bit-identical to a single-table gather regardless of placement.
-    """
+    """Routed pull over one shard-major ``(V, D)`` storage array: hot ids
+    from the cache, cold ids from main storage.  Values are identical
+    either way (write-through invariant), so the result is bit-identical
+    to a single-table gather regardless of placement."""
     cold = data[spec.flatten(ids)]
     if hot_rows is None or hot_rows.shape[0] == 0:
         return cold
@@ -141,7 +148,7 @@ def sharded_pull(data, hot_rows, slot_of, ids, *, spec: RoutingSpec):
 @functools.partial(jax.jit, static_argnames=("spec", "dedup"))
 def sharded_update(data, ids, row_grads, lr, *, spec: RoutingSpec,
                    dedup: bool = True):
-    """Routed push into main storage: one COO scatter-add of
+    """Routed push into shard-major storage: one COO scatter-add of
     ``-lr * row_grads`` at the ids' storage slots.
 
     With ``dedup`` the (ids, grads) stream is first reduced to one summed
@@ -149,8 +156,7 @@ def sharded_update(data, ids, row_grads, lr, *, spec: RoutingSpec,
     ``spec.vocab`` and are mapped past the end of storage, so the scatter
     drops them — no masked zero-adds, hence per-row accumulation order
     (and bits) matches the single-table scatter exactly.  Returns
-    ``(new_data, pushed_ids, summed_updates)`` so the caller can apply
-    the same updates to the hot cache.
+    ``(new_data, pushed_ids, summed_updates)``.
     """
     ids = ids.reshape(-1)
     g = row_grads.reshape(-1, spec.dim)
@@ -159,6 +165,20 @@ def sharded_update(data, ids, row_grads, lr, *, spec: RoutingSpec,
     u = (-lr * g).astype(data.dtype)
     tgt = jnp.where(ids < spec.vocab, spec.flatten(ids), data.shape[0])
     return data.at[tgt].add(u, mode="drop"), ids, u
+
+
+@functools.partial(jax.jit, static_argnames=("dedup", "vocab", "dim"))
+def _client_update(ids, row_grads, lr, *, vocab: int, dim: int,
+                   dedup: bool = True):
+    """Client half of a push: dedup + pre-scale in jnp, exactly as
+    :func:`sharded_update` would — the shard's ``+=`` of the result is
+    then the same IEEE add as the oracle's scatter.  Returns
+    ``(pushed_ids, updates)`` (padding ids carry ``vocab``)."""
+    ids = ids.reshape(-1)
+    g = row_grads.reshape(-1, dim)
+    if dedup:
+        ids, g = dedup_rows(ids, g, fill_id=vocab)
+    return ids, (-lr * g).astype(jnp.float32)
 
 
 @jax.jit
@@ -170,10 +190,23 @@ def _hot_apply(hot_rows, slot_of, ids, updates):
     return hot_rows.at[tgt].add(updates, mode="drop")
 
 
+@jax.jit
+def _merge_hot(cold, hot_rows, slot_of, ids):
+    """Overlay hot-cache rows onto transport-pulled cold rows (selection
+    only — bit-neutral under the write-through invariant)."""
+    slot = slot_of[ids]
+    hot = hot_rows[jnp.clip(slot, 0)]
+    return jnp.where((slot >= 0)[..., None], hot, cold)
+
+
 class ShardedTable:
-    """One logical embedding table, vocab-partitioned across N PS shards.
+    """One logical embedding table, vocab-partitioned across N PS shards
+    behind a :class:`~repro.ps.transport.Transport`.
 
     Parameters:
+      transport: ``None`` (→ in-process queue backend), ``"inproc"`` /
+        ``"multiproc"``, or a :class:`Transport` instance.  Shard ``s``
+        becomes endpoint ``s`` owning bucket ``s`` (its slab).
       monitor: optional :class:`repro.data.cache.AccessMonitor` — every
         pull records row-access counts (the data-management module's
         input signal).
@@ -182,33 +215,40 @@ class ShardedTable:
       hot_capacity: row capacity of the hot cache (0 disables it until a
         :class:`~repro.ps.placement.TierPlacer` is attached anyway —
         the cache only fills on re-pin).
-      rpc_latency_s: simulated per-op worker↔PS network latency (both
-        pull and push pay it).  0 on real deployments where the network
-        is physical; the overlap benchmark sets it to model the paper's
-        CPU-PS hop on a single-process container.
+      rpc_latency_s: extra simulated per-op worker↔PS latency on top of
+        the transport's real cost (the overlap benchmark calibrates it
+        to model the paper's cross-host network on a single box).
 
-    Thread-safety: the pusher and the placer both mutate state; a small
-    lock makes (storage, cache, slot-map) transitions atomic so a
-    concurrent pull always snapshots a coherent triple.
+    Thread-safety: pulls snapshot the (hot cache, slot map) pair under
+    ``_mu``; pushes and hot-cache re-pins serialize on ``_update_mu`` so
+    a re-pin landing mid-push can neither lose nor double-apply a
+    write-through (pulls stay wait-free — they may observe a push's
+    shard-side effect before its hot write-through, the same bounded
+    staleness the async client already trades on).
     """
 
     def __init__(self, vocab: int, dim: int, num_shards: int, key=None, *,
                  partition: str = "mod", dtype=jnp.float32, monitor=None,
                  telemetry=None, hot_capacity: int = 4096,
-                 rpc_latency_s: float = 0.0, init_scale: float | None = None):
+                 rpc_latency_s: float = 0.0, init_scale: float | None = None,
+                 transport: str | Transport | None = None):
         self.spec = RoutingSpec(vocab, dim, num_shards, partition)
         self.monitor = monitor
         self.telemetry = telemetry
         self.hot_capacity = int(hot_capacity)
         self.rpc_latency_s = float(rpc_latency_s)
+        self.dtype = dtype
         self._mu = threading.Lock()
-        self._data_version = 0   # bumped on every storage swap (push/demote)
+        self._update_mu = threading.RLock()
+        self.transport = make_transport(transport)
+        for s in range(num_shards):
+            self.transport.add_shard(s, dim=dim, optimizer="none")
         if key is not None:
             scale = dim**-0.5 if init_scale is None else init_scale
             dense = jax.random.normal(key, (vocab, dim), dtype) * scale
-            self.data = self._to_slabs(dense)
+            self._load_dense(dense)
         else:
-            self.data = jnp.zeros((vocab, dim), dtype)
+            self._load_dense(jnp.zeros((vocab, dim), dtype))
         # hot-row cache: empty until the first re-pin
         self.hot_rows = jnp.zeros((0, dim), dtype)
         self.slot_of = jnp.full((vocab + 1,), -1, jnp.int32)
@@ -222,33 +262,39 @@ class ShardedTable:
         self._cache_active = False
 
     # --- construction / inspection ------------------------------------
-    def _to_slabs(self, dense):
-        """(V, D) vocab order → shard-major slab order."""
-        perm = np.concatenate([self.spec.global_rows(s)
-                               for s in range(self.spec.num_shards)])
-        return jnp.asarray(dense)[perm]
+    def _load_dense(self, dense) -> None:
+        """Ship a vocab-order ``(V, D)`` table to the shards as slabs."""
+        dense_np = np.asarray(dense, np.float32)
+        for s in range(self.spec.num_shards):
+            self.transport.request(s, {
+                "op": "create", "bucket": s,
+                "rows": dense_np[self.spec.global_rows(s)]})
 
     @classmethod
     def from_dense(cls, table, num_shards: int, *, partition: str = "mod",
                    **kw) -> "ShardedTable":
         t = cls(table.shape[0], table.shape[1], num_shards,
                 partition=partition, dtype=table.dtype, **kw)
-        t.data = t._to_slabs(table)
+        t._load_dense(table)
         return t
 
     def to_dense(self):
         """Reassemble the logical ``(V, D)`` table (tests/checkpointing)."""
-        perm = np.concatenate([self.spec.global_rows(s)
-                               for s in range(self.spec.num_shards)])
-        inv = np.empty_like(perm)
-        inv[perm] = np.arange(perm.size)
-        return self.data[inv]
+        dense = np.empty((self.vocab, self.dim), np.float32)
+        replies = self.transport.request_many(
+            [(s, {"op": "snapshot", "bucket": s})
+             for s in range(self.num_shards)])
+        for s, rep in enumerate(replies):
+            dense[self.spec.global_rows(s)] = rep["rows"]
+        return jnp.asarray(dense, self.dtype)
 
     @property
     def shards(self) -> list:
-        """Per-shard slab views of the storage array."""
-        return [self.data[o:o + r] for o, r in
-                zip(self.spec.offsets, self.spec.shard_rows)]
+        """Per-shard slab snapshots (local-row order)."""
+        return [jnp.asarray(rep["rows"], self.dtype)
+                for rep in self.transport.request_many(
+                    [(s, {"op": "snapshot", "bucket": s})
+                     for s in range(self.num_shards)])]
 
     @property
     def vocab(self) -> int:
@@ -261,6 +307,39 @@ class ShardedTable:
     @property
     def num_shards(self) -> int:
         return self.spec.num_shards
+
+    # --- transport routing ----------------------------------------------
+    def _shard_messages(self, op: str, ids_flat: np.ndarray,
+                        payload: np.ndarray | None = None, **extra):
+        """Group a flat id stream by owner shard into per-shard messages.
+        Returns ``(messages, segments)`` where ``segments[i]`` are the
+        positions in ``ids_flat`` message ``i`` covers."""
+        owner, local = self.spec.route(ids_flat)
+        order = np.argsort(owner, kind="stable")
+        counts = np.bincount(owner, minlength=self.spec.num_shards)
+        msgs, segs, start = [], [], 0
+        for s in range(self.spec.num_shards):
+            n = int(counts[s])
+            if n == 0:
+                continue
+            seg = order[start:start + n]
+            start += n
+            msg = {"op": op, "buckets": np.full((n,), s, np.int64),
+                   "ids": local[seg], **extra}
+            if payload is not None:
+                msg["updates" if op == "add" else "grads"] = payload[seg]
+            msgs.append((s, msg))
+            segs.append(seg)
+        return msgs, segs
+
+    def _fetch(self, ids_flat: np.ndarray) -> np.ndarray:
+        """Raw routed pull over the transport (no metering, no cache) —
+        rows in ``ids_flat`` order."""
+        msgs, segs = self._shard_messages("pull", ids_flat)
+        out = np.empty((ids_flat.size, self.dim), np.float32)
+        for seg, rep in zip(segs, self.transport.request_many(msgs)):
+            out[seg] = rep["rows"]
+        return out
 
     # --- PS operations -------------------------------------------------
     def _account(self, op: str, ids_np: np.ndarray, seconds: float,
@@ -293,9 +372,13 @@ class ShardedTable:
         self._check_ids(ids_np)
         if self.monitor is not None:
             self.monitor.record(ids_np)
-        with self._mu:   # coherent (storage, cache, slot-map) snapshot
-            data, hot, slot = self.data, self.hot_rows, self.slot_of
-        out = sharded_pull(data, hot, slot, ids, spec=self.spec)
+        cold = self._fetch(ids_np.ravel().astype(np.int64))
+        out = jnp.asarray(cold.reshape(ids_np.shape + (self.dim,)),
+                          self.dtype)
+        with self._mu:   # coherent (cache, slot-map) snapshot
+            hot, slot = self.hot_rows, self.slot_of
+        if hot.shape[0]:
+            out = _merge_hot(out, hot, slot, ids)
         jax.block_until_ready(out)
         if self.rpc_latency_s:
             time.sleep(self.rpc_latency_s)
@@ -304,45 +387,43 @@ class ShardedTable:
         return out
 
     def push(self, ids, row_grads, *, lr: float, dedup: bool = True):
-        """PS push: apply ``-lr * row_grads`` to the owning shards (and
-        write through to the hot cache, keeping the two bit-identical)."""
+        """PS push: apply ``-lr * row_grads`` at the owning shards (and
+        write through to the hot cache, keeping the two bit-identical).
+
+        The dedup + ``-lr`` pre-scale runs client-side in jnp (identical
+        to the oracle's :func:`sharded_update` prologue); shards apply
+        the summed per-row updates with a plain f32 add."""
         t0 = time.perf_counter()
         ids = jnp.asarray(ids)
         ids_np = np.asarray(ids)
         self._check_ids(ids_np)
         grads = jnp.asarray(row_grads)
-        while True:
+        pushed_ids, updates = _client_update(
+            ids, grads, lr, vocab=self.vocab, dim=self.dim, dedup=dedup)
+        jax.block_until_ready(updates)
+        pushed_np = np.asarray(pushed_ids)
+        u_np = np.asarray(updates)
+        live = pushed_np < self.vocab        # drop dedup padding slots
+        wire_ids = pushed_np[live].astype(np.int64)
+        with self._update_mu:
+            msgs, _ = self._shard_messages("add", wire_ids,
+                                           payload=u_np[live])
+            self.transport.request_many(msgs)
+            # write-through must see the *current* cache/slot-map (a
+            # re-pin serializes on _update_mu, so it can't land between
+            # the shard apply and this update)
             with self._mu:
-                base, version = self.data, self._data_version
-            data_new, pushed_ids, updates = sharded_update(
-                base, ids, grads, lr, spec=self.spec, dedup=dedup)
-            jax.block_until_ready(data_new)
-            with self._mu:
-                if self._data_version != version:
-                    # storage was swapped under us (another push, or a
-                    # memory-kind demotion) — redo against the new array so
-                    # no update is lost; at most one retry in steady state
-                    continue
-                # the hot write-through must use the *current* cache/slot-
-                # map (a re-pin may have landed since the scatter started)
                 if self.hot_rows.shape[0]:
                     self.hot_rows = jax.block_until_ready(_hot_apply(
                         self.hot_rows, self.slot_of, pushed_ids, updates))
-                self.data = data_new
-                self._data_version += 1
-                break
         if self.rpc_latency_s:
             time.sleep(self.rpc_latency_s)
         if self.telemetry is not None:
-            itemsize = self.data.dtype.itemsize
-            if dedup:
-                # the wire carries one summed row per distinct id — reuse
-                # the deduped ids the scatter produced (drop the padding)
-                wire_ids = np.asarray(pushed_ids)
-                wire_ids = wire_ids[wire_ids < self.vocab]
-            else:
-                wire_ids = ids_np
-            self._account("push", wire_ids, time.perf_counter() - t0,
+            itemsize = np.dtype(np.float32).itemsize
+            # the wire carries one summed row per distinct id when
+            # deduping; raw duplicates otherwise
+            acct_ids = wire_ids if dedup else ids_np
+            self._account("push", acct_ids, time.perf_counter() - t0,
                           self.spec.dim * itemsize + ids_np.itemsize)
         return self
 
@@ -377,24 +458,31 @@ class ShardedTable:
         # set sizes don't retrigger jit traces of the pull/push paths
         pad = np.zeros((self.hot_capacity,), np.int64)
         pad[:hot_ids.size] = hot_ids
-        flat = self.spec.flatten(jnp.asarray(pad))
-        with self._mu:
-            self.hot_rows = _to_memory_kind(self.data[flat], "device")
-            self.slot_of = slot_j
-            self._slot_np = slot
-            self._cache_active = True
+        with self._update_mu:    # no push between fetch and install
+            rows = jnp.asarray(self._fetch(pad), self.dtype)
+            with self._mu:
+                self.hot_rows = _to_memory_kind(rows, "device")
+                self.slot_of = slot_j
+                self._slot_np = slot
+                self._cache_active = True
         return int(hot_ids.size)
 
     def demote_storage(self) -> None:
-        """Best-effort: move main storage to host memory (TPU runtimes) —
-        the hot cache is the only HBM-resident copy after this."""
-        with self._mu:
-            self.data = _to_memory_kind(self.data, "pinned_host")
-            self._data_version += 1   # make any in-flight push retry
+        """Tiering hint: shard slabs are the cold tier once the hot cache
+        covers the head of the distribution.  Client-side this is a
+        broadcast notification — on CPU shard servers it is a no-op; a
+        TPU/accelerator shard would move its slab off-device."""
+        self.transport.request_many(
+            [(s, {"op": "demote"}) for s in sorted(
+                self.transport.live_shards)])
 
     def tier_counts(self) -> np.ndarray:
         """(num_shards, 3) rows per (DEVICE, HOST, DISK) tier per shard."""
         return np.stack([np.bincount(t, minlength=3) for t in self.tiers])
+
+    def close(self) -> None:
+        """Shut the shard endpoints down (idempotent)."""
+        self.transport.close()
 
 
 def _to_memory_kind(arr, kind: str):

@@ -50,6 +50,23 @@ class PSTelemetry:
         self._lock = threading.Lock()
         self.pull = [ShardCounters() for _ in range(num_shards)]
         self.push = [ShardCounters() for _ in range(num_shards)]
+        self.events: list[dict] = []
+
+    def ensure(self, num_shards: int) -> None:
+        """Grow the per-shard counter lists (elastic fleets add shards at
+        runtime; counters for departed shards are kept — traffic history
+        stays additive)."""
+        with self._lock:
+            while self.num_shards < num_shards:
+                self.pull.append(ShardCounters())
+                self.push.append(ShardCounters())
+                self.num_shards += 1
+
+    def record_event(self, event: dict) -> None:
+        """Log one fleet lifecycle event (join/leave/kill/migrate/recover
+        dicts from :class:`~repro.ps.elastic.ElasticPSFleet`)."""
+        with self._lock:
+            self.events.append(dict(event))
 
     def record(self, op: str, *, rows: np.ndarray, bytes_: np.ndarray,
                seconds: float, hot_rows: np.ndarray | None = None) -> None:
@@ -58,7 +75,7 @@ class PSTelemetry:
         to every shard the op touched (shard RPCs fly in parallel)."""
         side = self.pull if op == "pull" else self.push
         with self._lock:
-            for s in range(self.num_shards):
+            for s in range(min(self.num_shards, len(rows))):
                 if rows[s] == 0:
                     continue
                 c = side[s]

@@ -1,0 +1,351 @@
+"""Pluggable worker↔PS transport (HeterPS §3's network hop, made real).
+
+Every PS consumer (:class:`~repro.ps.sharding.ShardedTable`,
+:class:`~repro.ps.elastic.ElasticPSFleet`, and through them
+``PSClient``) speaks the message protocol of
+:mod:`repro.ps.server` to shard endpoints through one of two backends:
+
+* :class:`InProcTransport` — shards are :class:`~repro.ps.server.
+  ShardServer` objects behind per-shard mailbox queues in this process.
+  Deterministic and copy-free: the backend for tests, CI and the
+  bit-exact oracle path.
+* :class:`MultiprocTransport` — each shard is a **real OS process**
+  running :func:`~repro.ps.server.shard_main` behind a duplex
+  ``multiprocessing`` connection (an AF_UNIX socketpair / OS pipe — the
+  same framing a TCP deployment would use).  Requests to distinct
+  shards fly in parallel (`request_many` sends to every shard before
+  collecting replies); requests to one shard are serialized by a
+  per-shard lock, which is also what makes the transport safe under
+  ``PSClient``'s puller/pusher thread pair.
+
+Failure semantics are part of the contract: a shard that answers with
+``{"err": ...}`` raises :class:`PSShardError` (the shard is alive — bad
+request); a dead/hung endpoint raises :class:`PSShardLost` (what the
+elastic fleet's recovery path catches).  ``kill()`` is the fault
+injector: it terminates the worker *without* any flush, so whatever the
+shard acked last is exactly what a replica must reproduce.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+from repro.ps.server import ShardServer, shard_main
+
+
+class PSShardError(RuntimeError):
+    """The shard processed the request and reported a failure."""
+
+
+class PSShardLost(RuntimeError):
+    """The shard is gone (killed, crashed, or timed out) — the request
+    may or may not have been applied.  Recovery promotes the replica."""
+
+
+def _check(reply: dict, shard_id: int) -> dict:
+    if reply.get("err"):
+        raise PSShardError(
+            f"shard {shard_id} failed request:\n{reply['err']}")
+    return reply
+
+
+def _raise_lost(lost: set[int]):
+    err = PSShardLost(f"shards lost mid-request: {sorted(lost)}")
+    err.shard_ids = lost
+    raise err
+
+
+class Transport:
+    """Abstract worker↔PS message channel.
+
+    ``add_shard`` brings a new endpoint up (the *elastic join* primitive),
+    ``request``/``request_many`` are blocking RPCs, ``stop_shard`` is a
+    graceful leave, ``kill_shard`` a hard failure.  Implementations keep
+    per-shard FIFO ordering — the protocol relies on it (an ``install``
+    sent before a ``grad`` must be applied first).
+    """
+
+    name = "abstract"
+
+    def add_shard(self, shard_id: int, *, dim: int, optimizer: str = "none",
+                  hyper: dict | None = None) -> None:
+        raise NotImplementedError
+
+    def request(self, shard_id: int, msg: dict) -> dict:
+        raise NotImplementedError
+
+    def request_many(self, pairs: list[tuple[int, dict]]) -> list[dict]:
+        """Issue several (shard, msg) requests; replies in call order.
+
+        Partial-failure contract (what elastic recovery leans on): every
+        *live* shard in ``pairs`` has processed its message and had its
+        reply consumed before :class:`PSShardLost` is raised for the dead
+        ones — the exception carries ``shard_ids``, and no reply is left
+        in flight to desynchronize a later request.  Default
+        implementation is sequential; backends override to overlap
+        shards.
+        """
+        replies, lost = [], set()
+        for s, m in pairs:
+            try:
+                replies.append(self.request(s, m))
+            except PSShardLost:
+                lost.add(s)
+                replies.append(None)
+        if lost:
+            _raise_lost(lost)
+        return replies
+
+    def stop_shard(self, shard_id: int) -> None:
+        raise NotImplementedError
+
+    def kill_shard(self, shard_id: int) -> None:
+        raise NotImplementedError
+
+    @property
+    def live_shards(self) -> set[int]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        for s in sorted(self.live_shards):
+            try:
+                self.stop_shard(s)
+            except PSShardLost:
+                pass
+
+
+class InProcTransport(Transport):
+    """Shard endpoints in this process behind mailbox queues.
+
+    ``request`` enqueues the message, drains the shard's mailbox and
+    returns the reply — synchronous and deterministic, but through the
+    exact message surface the multiprocess backend uses, so everything
+    above the transport is backend-agnostic.  A per-shard lock makes the
+    drain atomic under concurrent clients (PSClient's threads).
+    """
+
+    name = "inproc"
+
+    def __init__(self):
+        self._servers: dict[int, ShardServer] = {}
+        self._locks: dict[int, threading.Lock] = {}
+        self._mail: dict[int, deque] = {}
+
+    def add_shard(self, shard_id, *, dim, optimizer="none", hyper=None):
+        if shard_id in self._servers:
+            raise ValueError(f"shard {shard_id} already exists")
+        self._servers[shard_id] = ShardServer(
+            shard_id, dim, optimizer=optimizer, hyper=hyper)
+        self._locks[shard_id] = threading.Lock()
+        self._mail[shard_id] = deque()
+
+    def request(self, shard_id, msg):
+        try:
+            server = self._servers[shard_id]
+        except KeyError:
+            raise PSShardLost(f"shard {shard_id} is not live")
+        with self._locks[shard_id]:
+            mail = self._mail[shard_id]
+            mail.append(msg)
+            reply = None
+            while mail:                      # drain the mailbox in order
+                reply = server.safe_handle(mail.popleft())
+        return _check(reply, shard_id)
+
+    def stop_shard(self, shard_id):
+        self.request(shard_id, {"op": "shutdown"})
+        self._drop(shard_id)
+
+    def kill_shard(self, shard_id):
+        # hard failure: state vanishes with no flush, exactly like a
+        # terminated process
+        if shard_id not in self._servers:
+            raise PSShardLost(f"shard {shard_id} is not live")
+        self._drop(shard_id)
+
+    def _drop(self, shard_id):
+        self._servers.pop(shard_id, None)
+        self._locks.pop(shard_id, None)
+        self._mail.pop(shard_id, None)
+
+    @property
+    def live_shards(self):
+        return set(self._servers)
+
+
+class _Remote:
+    __slots__ = ("conn", "proc", "lock")
+
+    def __init__(self, conn, proc):
+        self.conn = conn
+        self.proc = proc
+        self.lock = threading.RLock()
+
+
+class MultiprocTransport(Transport):
+    """One OS process per shard, speaking pickled messages over a duplex
+    ``multiprocessing`` connection.
+
+    ``start_method="spawn"`` (default) gives clean numpy-only children —
+    :mod:`repro.ps.server` never imports jax, and ``repro.ps``'s lazy
+    ``__init__`` keeps the import graph shallow, so worker startup is
+    fast.  ``request_timeout`` bounds every recv: a hung shard surfaces
+    as :class:`PSShardLost` instead of a hung trainer (the CI lane runs
+    these tests under a hard per-test timeout on top).
+    """
+
+    name = "multiproc"
+
+    def __init__(self, *, start_method: str = "spawn",
+                 request_timeout: float = 60.0):
+        import multiprocessing as mp
+
+        self._ctx = mp.get_context(start_method)
+        self._timeout = float(request_timeout)
+        self._shards: dict[int, _Remote] = {}
+
+    def add_shard(self, shard_id, *, dim, optimizer="none", hyper=None):
+        if shard_id in self._shards:
+            raise ValueError(f"shard {shard_id} already exists")
+        parent, child = self._ctx.Pipe(duplex=True)
+        proc = self._ctx.Process(
+            target=shard_main, args=(child, shard_id, dim, optimizer, hyper),
+            daemon=True, name=f"ps-shard-{shard_id}")
+        proc.start()
+        child.close()
+        self._shards[shard_id] = _Remote(parent, proc)
+
+    # --- RPC -------------------------------------------------------------
+    def _remote(self, shard_id) -> _Remote:
+        try:
+            return self._shards[shard_id]
+        except KeyError:
+            raise PSShardLost(f"shard {shard_id} is not live")
+
+    def _send(self, r: _Remote, shard_id: int, msg: dict) -> None:
+        try:
+            r.conn.send(msg)
+        except (BrokenPipeError, OSError):
+            self._reap(shard_id)
+            raise PSShardLost(f"shard {shard_id} pipe closed on send")
+
+    def _recv(self, r: _Remote, shard_id: int) -> dict:
+        deadline = time.monotonic() + self._timeout
+        while True:
+            try:
+                if r.conn.poll(min(0.25, max(0.0,
+                                             deadline - time.monotonic()))):
+                    return _check(r.conn.recv(), shard_id)
+            except (EOFError, OSError):
+                self._reap(shard_id)
+                raise PSShardLost(f"shard {shard_id} died mid-request")
+            if not r.proc.is_alive():
+                self._reap(shard_id)
+                raise PSShardLost(f"shard {shard_id} process exited")
+            if time.monotonic() > deadline:
+                self._reap(shard_id)
+                raise PSShardLost(
+                    f"shard {shard_id} timed out after {self._timeout}s")
+
+    def request(self, shard_id, msg):
+        r = self._remote(shard_id)
+        with r.lock:
+            self._send(r, shard_id, msg)
+            return self._recv(r, shard_id)
+
+    def request_many(self, pairs):
+        """Send to every shard first, then collect — distinct shards
+        serve concurrently, so an N-shard op costs ~one RPC, not N.
+
+        Honors the base-class partial-failure contract: a dead shard is
+        noted, every live shard's reply is still collected, then one
+        :class:`PSShardLost` with ``shard_ids`` is raised.
+        """
+        # lock per shard in sorted order (deadlock-free under concurrent
+        # request_many calls), keeping each shard's send→recv FIFO intact
+        order = sorted({s for s, _ in pairs})
+        lost: set[int] = set()
+        remotes = {}
+        for s in order:
+            try:
+                remotes[s] = self._remote(s)
+            except PSShardLost:
+                lost.add(s)
+        for s in order:
+            if s in remotes:
+                remotes[s].lock.acquire()
+        try:
+            for s, m in pairs:
+                if s in lost:
+                    continue
+                try:
+                    self._send(remotes[s], s, m)
+                except PSShardLost:
+                    lost.add(s)
+            replies = []
+            for s, _ in pairs:
+                if s in lost:
+                    replies.append(None)
+                    continue
+                try:
+                    replies.append(self._recv(remotes[s], s))
+                except PSShardLost:
+                    lost.add(s)
+                    replies.append(None)
+        finally:
+            for s in reversed(order):
+                if s in remotes:
+                    remotes[s].lock.release()
+        if lost:
+            _raise_lost(lost)
+        return replies
+
+    # --- lifecycle -------------------------------------------------------
+    def _reap(self, shard_id) -> None:
+        r = self._shards.pop(shard_id, None)
+        if r is None:
+            return
+        try:
+            r.conn.close()
+        except OSError:
+            pass
+        if r.proc.is_alive():
+            r.proc.terminate()
+        r.proc.join(timeout=5.0)
+
+    def stop_shard(self, shard_id):
+        r = self._remote(shard_id)
+        with r.lock:
+            self._send(r, shard_id, {"op": "shutdown"})
+            try:
+                self._recv(r, shard_id)
+            except PSShardLost:
+                pass                 # raced its own clean exit — fine
+        self._reap(shard_id)
+
+    def kill_shard(self, shard_id):
+        """Fault injection: SIGTERM the worker, no flush, no goodbye."""
+        r = self._remote(shard_id)
+        with r.lock:
+            self._reap(shard_id)
+
+    @property
+    def live_shards(self):
+        return set(self._shards)
+
+
+def make_transport(kind: str | Transport | None, **kw) -> Transport:
+    """``"inproc"`` | ``"multiproc"`` | an existing instance | None
+    (→ in-proc).  The string form is what CLI flags pass through."""
+    if kind is None:
+        return InProcTransport()
+    if isinstance(kind, Transport):
+        return kind
+    if kind == "inproc":
+        return InProcTransport()
+    if kind == "multiproc":
+        return MultiprocTransport(**kw)
+    raise ValueError(f"unknown transport {kind!r} "
+                     f"(expected inproc|multiproc)")

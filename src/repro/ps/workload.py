@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.data import AccessMonitor, PrefetchLoader
 from repro.ps.client import PSClient
+from repro.ps.elastic import ElasticPSFleet
 from repro.ps.placement import TierPlacer
 from repro.ps.sharding import ShardedTable
 from repro.ps.telemetry import PSTelemetry
@@ -98,19 +99,31 @@ def make_step_fn(cfg: CTRConfig):
 
 def make_table(cfg: CTRConfig, num_shards: int, *,
                partition: str = "mod", rpc_latency_s: float = 0.0,
-               with_monitor: bool = True) -> ShardedTable:
+               with_monitor: bool = True, transport=None) -> ShardedTable:
     return ShardedTable(
         cfg.vocab, cfg.emb_dim, num_shards,
         jax.random.PRNGKey(cfg.seed), init_scale=0.05, partition=partition,
         monitor=AccessMonitor(cfg.vocab) if with_monitor else None,
-        telemetry=PSTelemetry(num_shards), rpc_latency_s=rpc_latency_s)
+        telemetry=PSTelemetry(num_shards), rpc_latency_s=rpc_latency_s,
+        transport=transport)
+
+
+def make_fleet(cfg: CTRConfig, num_shards: int, *,
+               optimizer: str = "sgd", transport=None,
+               staleness_bound: int = 8,
+               rpc_latency_s: float = 0.0) -> ElasticPSFleet:
+    return ElasticPSFleet(
+        cfg.vocab, cfg.emb_dim, num_shards=num_shards, optimizer=optimizer,
+        transport=transport, telemetry=PSTelemetry(num_shards),
+        key=jax.random.PRNGKey(cfg.seed), init_scale=0.05,
+        staleness_bound=staleness_bound, rpc_latency_s=rpc_latency_s)
 
 
 def train_ctr_ps(cfg: CTRConfig | None = None, *, steps: int = 200,
                  num_shards: int = 4, mode: str = "async",
                  partition: str = "mod", rpc_latency_s: float = 0.0,
                  repin_interval: int = 50, depth: int = 2,
-                 log_every: int = 0) -> dict:
+                 log_every: int = 0, transport=None) -> dict:
     """Train the reduced CTR model over the sharded PS.
 
     ``mode="sync"``: pull → compute → push each step (the baseline the
@@ -123,7 +136,7 @@ def train_ctr_ps(cfg: CTRConfig | None = None, *, steps: int = 200,
         raise ValueError(f"mode must be sync|async, got {mode!r}")
     cfg = cfg or CTRConfig()
     table = make_table(cfg, num_shards, partition=partition,
-                       rpc_latency_s=rpc_latency_s)
+                       rpc_latency_s=rpc_latency_s, transport=transport)
     placer = TierPlacer(table, table.monitor, interval=repin_interval)
     step_fn = make_step_fn(cfg)
     tower = init_tower(cfg, jax.random.PRNGKey(cfg.seed + 1))
@@ -181,6 +194,7 @@ def train_ctr_ps(cfg: CTRConfig | None = None, *, steps: int = 200,
 
     measured_res = table.telemetry.to_resource(CPU_CORE)
     odt_sync, odt_act = table.telemetry.embedding_odt(len(losses) * cfg.batch)
+    table.close()
     return {
         "mode": mode, "steps": len(losses), "num_shards": num_shards,
         "first_loss": losses[0], "last_loss": losses[-1],
@@ -200,4 +214,112 @@ def train_ctr_ps(cfg: CTRConfig | None = None, *, steps: int = 200,
         "measured_net_bw": measured_res.net_bw,
         "embedding_odt_sync": odt_sync,
         "embedding_odt_act": odt_act,
+    }
+
+
+def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
+                      num_shards: int = 3, optimizer: str = "sgd",
+                      transport=None, mode: str = "sync",
+                      events: list[tuple[int, str, int | None]] | None = None,
+                      staleness_bound: int = 8, depth: int = 2,
+                      rpc_latency_s: float = 0.0,
+                      log_every: int = 0) -> dict:
+    """Train the reduced CTR model over an **elastic** PS fleet, with
+    scripted fleet events injected mid-training.
+
+    ``events`` is a list of ``(step, action, shard)`` where ``action`` is
+    ``"join"`` (shard ignored), ``"kill"`` or ``"leave"`` — e.g.
+    ``[(40, "join", None), (80, "kill", 0)]`` grows the fleet at step 40
+    and hard-kills shard 0 at step 80 (replica recovery kicks in on the
+    next touch).  Training never pauses: the loop keeps issuing
+    pull/push through every event.
+
+    The sync replication + deterministic PS-hosted optimizer make the
+    run's loss trajectory **bit-equal** (``mode="sync"``) to the same run
+    without any events — the acceptance pin for lossless recovery.
+    Returns the per-step ``losses`` so callers can compare trajectories.
+    """
+    if mode not in ("sync", "async"):
+        raise ValueError(f"mode must be sync|async, got {mode!r}")
+    cfg = cfg or CTRConfig()
+    fleet = make_fleet(cfg, num_shards, optimizer=optimizer,
+                       transport=transport, staleness_bound=staleness_bound,
+                       rpc_latency_s=rpc_latency_s)
+    by_step: dict[int, list[tuple[str, int | None]]] = {}
+    for step, action, shard in (events or []):
+        by_step.setdefault(int(step), []).append((action, shard))
+
+    def fire(i: int) -> None:
+        for action, shard in by_step.get(i, []):
+            if action == "join":
+                fleet.join()
+            elif action == "kill":
+                if shard in fleet.transport.live_shards:
+                    fleet.kill(shard)
+            elif action == "leave":
+                if shard in fleet.transport.live_shards:
+                    fleet.leave(shard)
+            else:
+                raise ValueError(f"unknown fleet event {action!r}")
+
+    step_fn = make_step_fn(cfg)
+    tower = init_tower(cfg, jax.random.PRNGKey(cfg.seed + 1))
+    # the fleet's PS-hosted optimizer applies the lr server-side, so the
+    # pushed payload is the raw (deduped, summed) gradient
+    emb_lr = cfg.lr * cfg.emb_lr_scale
+    losses: list[float] = []
+    ts: list[float] = []
+    t_start = time.perf_counter()
+
+    if mode == "sync":
+        stream = click_stream(cfg)
+        for i in range(steps):
+            b = next(stream)
+            rows = fleet.pull(b["ids"])
+            tower, g_emb, loss = step_fn(tower, rows,
+                                         jnp.asarray(b["label"]))
+            fleet.push(b["ids"], jax.block_until_ready(g_emb), lr=emb_lr)
+            fire(i)
+            losses.append(float(loss))
+            ts.append(time.perf_counter() - t_start)
+            if log_every and i % log_every == 0:
+                print(f"step {i:4d} logloss {losses[-1]:.4f}", flush=True)
+    else:
+        loader = PrefetchLoader(
+            itertools.islice(click_stream(cfg), steps), depth=depth)
+        client = PSClient(fleet, loader, ids_key="ids", depth=depth)
+        try:
+            for i, (b, rows) in enumerate(client):
+                tower, g_emb, loss = step_fn(tower, rows,
+                                             jnp.asarray(b["label"]))
+                client.push(b["ids"], jax.block_until_ready(g_emb),
+                            lr=emb_lr)
+                fire(i)
+                losses.append(float(loss))
+                ts.append(time.perf_counter() - t_start)
+        finally:
+            client.close()
+            loader.close()
+
+    wall = time.perf_counter() - t_start
+    tel = fleet.telemetry.totals()
+    fleet_events = list(fleet.events)
+    stats = fleet.stats()
+    fleet.close()
+    recoveries = [e for e in fleet_events if e["kind"] == "recover"]
+    joins = [e for e in fleet_events if e["kind"] == "join"]
+    return {
+        "mode": mode, "steps": len(losses), "optimizer": optimizer,
+        "first_loss": losses[0], "last_loss": losses[-1],
+        "loss_decreased": losses[-1] < losses[0],
+        "losses": losses,
+        "seconds": wall,
+        "step_ts": ts,
+        "steps_per_sec": len(losses) / wall if wall > 0 else 0.0,
+        "live_shards": stats["live_shards"],
+        "events": fleet_events,
+        "recovery_seconds": sum(e["seconds"] for e in recoveries),
+        "join_seconds": sum(e["seconds"] for e in joins),
+        "pull_gb": tel["pull"]["bytes"] / 1e9,
+        "push_gb": tel["push"]["bytes"] / 1e9,
     }

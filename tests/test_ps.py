@@ -244,6 +244,47 @@ class TestPSClient:
         with pytest.raises(RuntimeError, match="close"):
             client.push(np.array([1]), np.zeros((1, DIM), np.float32), lr=0.1)
 
+    def test_close_on_stuck_queue_reports_dropped_pushes(self):
+        """A table whose push hangs must not hang close(): the drain
+        times out deterministically and reports how many pushes were
+        dropped, with the counters staying consistent."""
+        import threading
+
+        release = threading.Event()
+
+        class StuckTable:
+            def push(self, ids, grads, lr, dedup):
+                release.wait()
+
+        client = PSClient(StuckTable(), iter([]), depth=8)
+        try:
+            for _ in range(3):
+                client.push(np.array([1]), np.zeros((1, DIM), np.float32),
+                            lr=0.1)
+            with pytest.raises(TimeoutError, match=r"3 push\(es\) dropped"):
+                client.close(timeout=0.2)
+            s = client.stats()
+            assert s["pushes_dropped"] == 3
+            assert s["steps_pushed"] + s["pushes_dropped"] \
+                == s["pushes_enqueued"]
+            # close() is idempotent even after a failed close
+            client.close(timeout=0.2)
+        finally:
+            release.set()
+
+    def test_close_surfaces_pusher_error_with_dropped_count(self):
+        class BrokenTable:
+            def push(self, ids, grads, lr, dedup):
+                raise ValueError("shard exploded")
+
+        client = PSClient(BrokenTable(), iter([]), depth=8)
+        client.push(np.array([1]), np.zeros((1, DIM), np.float32), lr=0.1)
+        with pytest.raises(RuntimeError,
+                           match=r"PS push failed: 1 push\(es\) dropped"):
+            client.close(timeout=1.0)
+        assert client.stats()["pushes_dropped"] == 1
+        client.close()  # no-op, does not re-raise
+
 
 class TestTelemetry:
     def test_pull_push_byte_accounting(self, dense_table):

@@ -1,0 +1,237 @@
+"""Transport-backed PS: multiprocess shards bit-exact vs in-process,
+failure semantics, and the spawn-fast import contract.
+
+The in-process transport is the oracle (itself pinned against
+``SparseEmbedding`` in test_ps.py); these tests pin the multiprocess
+backend — real worker processes behind OS pipes — bit-for-bit against
+it, and exercise the failure surface elastic recovery stands on
+(``PSShardError`` vs ``PSShardLost``, partial-failure ``request_many``).
+
+Every test runs under a hard SIGALRM timeout so a hung shard process can
+never hang the suite (the CI multiproc lane relies on this).
+"""
+
+from __future__ import annotations
+
+import signal
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ps.server import ShardServer
+from repro.ps.sharding import ShardedTable
+from repro.ps.transport import (
+    InProcTransport, MultiprocTransport, PSShardError, PSShardLost,
+    make_transport,
+)
+
+VOCAB, DIM = 101, 8
+HARD_TIMEOUT_S = 120
+
+
+@pytest.fixture(autouse=True)
+def hard_timeout():
+    """SIGALRM per-test ceiling: a wedged shard process fails the test
+    instead of wedging the runner."""
+    def boom(signum, frame):
+        raise TimeoutError(
+            f"test exceeded the {HARD_TIMEOUT_S}s hard timeout")
+
+    old = signal.signal(signal.SIGALRM, boom)
+    signal.alarm(HARD_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+def _traffic(rng, n_ops=6):
+    """A deterministic mixed pull/push workload."""
+    ops = []
+    for i in range(n_ops):
+        ids = rng.integers(0, VOCAB, size=rng.integers(3, 40))
+        grads = rng.normal(size=(ids.size, DIM)).astype(np.float32)
+        ops.append((ids, grads, 0.01 * (i + 1), bool(i % 2)))
+    return ops
+
+
+class TestMultiprocBitExact:
+    @pytest.mark.parametrize("partition", ["mod", "block"])
+    @pytest.mark.parametrize("shards", [1, 3])
+    def test_multiproc_matches_inproc(self, shards, partition):
+        rng = np.random.default_rng(0)
+        ops = _traffic(rng)
+        key = jax.random.PRNGKey(7)
+        tables = [
+            ShardedTable(VOCAB, DIM, shards, key, partition=partition,
+                         transport=kind)
+            for kind in ("inproc", "multiproc")
+        ]
+        try:
+            for ids, grads, lr, dedup in ops:
+                pulled = [np.asarray(t.pull(ids)) for t in tables]
+                assert np.array_equal(pulled[0], pulled[1])
+                for t in tables:
+                    t.push(ids, grads, lr=lr, dedup=dedup)
+            dense = [np.asarray(t.to_dense()) for t in tables]
+            assert np.array_equal(dense[0], dense[1])
+        finally:
+            for t in tables:
+                t.close()
+
+    def test_hot_cache_write_through_over_multiproc(self):
+        rng = np.random.default_rng(1)
+        table = ShardedTable(VOCAB, DIM, 3, jax.random.PRNGKey(0),
+                             transport="multiproc", hot_capacity=16)
+        try:
+            hot = np.arange(10, dtype=np.int64)
+            table.install_hot_rows(hot)
+            ids = rng.integers(0, VOCAB, size=64)
+            grads = rng.normal(size=(64, DIM)).astype(np.float32)
+            table.push(ids, grads, lr=0.5)
+            # cached rows must equal the shard-held rows after the push
+            pulled = np.asarray(table.pull(hot))          # served hot
+            cold = table._fetch(hot)                      # served by shards
+            assert np.array_equal(pulled, cold)
+        finally:
+            table.close()
+
+
+class TestFailureSemantics:
+    def test_bad_request_is_error_not_lost(self):
+        for kind in ("inproc", "multiproc"):
+            tr = make_transport(kind)
+            tr.add_shard(0, dim=DIM)
+            try:
+                with pytest.raises(PSShardError):
+                    tr.request(0, {"op": "no-such-op"})
+                # the shard survived the bad request
+                assert tr.request(0, {"op": "stats"})["ok"]
+            finally:
+                tr.close()
+
+    def test_kill_surfaces_as_lost(self):
+        for kind in ("inproc", "multiproc"):
+            tr = make_transport(kind)
+            tr.add_shard(0, dim=DIM)
+            tr.kill_shard(0)
+            assert tr.live_shards == set()
+            with pytest.raises(PSShardLost):
+                tr.request(0, {"op": "stats"})
+            tr.close()
+
+    def test_request_many_partial_failure_applies_to_live_shards(self):
+        for kind in ("inproc", "multiproc"):
+            tr = make_transport(kind)
+            for s in (0, 1, 2):
+                tr.add_shard(s, dim=DIM)
+                tr.request(s, {"op": "create", "bucket": s,
+                               "rows": np.zeros((4, DIM), np.float32)})
+            tr.kill_shard(1)
+            msgs = [(s, {"op": "add",
+                         "buckets": np.array([s]),
+                         "ids": np.array([0]),
+                         "updates": np.ones((1, DIM), np.float32)})
+                    for s in (0, 1, 2)]
+            with pytest.raises(PSShardLost) as ei:
+                tr.request_many(msgs)
+            assert ei.value.shard_ids == {1}
+            # the live shards applied their messages, replies consumed —
+            # the channel is still in protocol sync
+            for s in (0, 2):
+                rows = tr.request(s, {"op": "snapshot", "bucket": s})["rows"]
+                assert rows[0, 0] == 1.0
+            tr.close()
+
+    def test_timeout_surfaces_as_lost(self):
+        tr = MultiprocTransport(request_timeout=1.0)
+        tr.add_shard(0, dim=DIM)
+        try:
+            # suspend the worker so the request genuinely hangs
+            import os
+
+            pid = tr._shards[0].proc.pid
+            os.kill(pid, signal.SIGSTOP)
+            try:
+                with pytest.raises(PSShardLost):
+                    tr.request(0, {"op": "stats"})
+            finally:
+                try:
+                    os.kill(pid, signal.SIGCONT)
+                except ProcessLookupError:
+                    pass
+            assert 0 not in tr.live_shards
+        finally:
+            tr.close()
+
+    def test_double_add_shard_rejected(self):
+        tr = InProcTransport()
+        tr.add_shard(0, dim=DIM)
+        with pytest.raises(ValueError):
+            tr.add_shard(0, dim=DIM)
+        tr.close()
+
+
+class TestServerProtocol:
+    def test_acked_counts_per_bucket(self):
+        srv = ShardServer(0, DIM)
+        srv.handle({"op": "create", "bucket": 3,
+                    "rows": np.zeros((5, DIM), np.float32)})
+        for i in range(3):
+            out = srv.handle({"op": "add", "buckets": np.array([3, 3]),
+                              "ids": np.array([0, 1]),
+                              "updates": np.ones((2, DIM), np.float32)})
+        assert out["acked"] == {3: 3}
+
+    def test_replica_flag_splits_counters(self):
+        srv = ShardServer(0, DIM)
+        srv.handle({"op": "create", "bucket": 0,
+                    "rows": np.zeros((5, DIM), np.float32)})
+        msg = {"op": "add", "buckets": np.array([0]), "ids": np.array([0]),
+               "updates": np.ones((1, DIM), np.float32)}
+        srv.handle(msg)
+        srv.handle({**msg, "replica": True})
+        assert srv.counters["pushes"] == 1
+        assert srv.counters["replica_pushes"] == 1
+
+    def test_snapshot_install_roundtrip_preserves_opt_state(self):
+        src = ShardServer(0, DIM, optimizer="adam")
+        dst = ShardServer(1, DIM, optimizer="adam")
+        rng = np.random.default_rng(0)
+        src.handle({"op": "create", "bucket": 0,
+                    "rows": rng.normal(size=(6, DIM)).astype(np.float32)})
+        grad = {"op": "grad", "buckets": np.array([0, 0]),
+                "ids": np.array([1, 4]),
+                "grads": rng.normal(size=(2, DIM)).astype(np.float32),
+                "lr": 0.1}
+        src.handle(grad)
+        snap = src.handle({"op": "snapshot", "bucket": 0})
+        dst.handle({"op": "install", "bucket": 0, "rows": snap["rows"],
+                    "opt": snap["opt"], "acked": snap["acked"]})
+        # replaying one more identical update lands bit-identically
+        src.handle(grad)
+        dst.handle(grad)
+        a = src.handle({"op": "snapshot", "bucket": 0})
+        b = dst.handle({"op": "snapshot", "bucket": 0})
+        assert np.array_equal(a["rows"], b["rows"])
+        assert a["acked"] == b["acked"]
+
+
+class TestSpawnImportCost:
+    def test_server_module_imports_without_jax(self):
+        """The shard worker's import path must stay numpy-only — that is
+        what keeps multiproc shard startup at milliseconds."""
+        import os
+
+        root = os.path.join(os.path.dirname(__file__), "..")
+        code = ("import sys; import repro.ps.server; "
+                "sys.exit(1 if 'jax' in sys.modules else 0)")
+        proc = subprocess.run(
+            [sys.executable, "-c", code],
+            env={**os.environ, "PYTHONPATH": os.path.join(root, "src")},
+            capture_output=True, timeout=60)
+        assert proc.returncode == 0, proc.stderr.decode()

@@ -182,6 +182,77 @@ class TestDecodeLoop:
         np.testing.assert_array_equal(np.asarray(got), want)
 
 
+class TestSampling:
+    def _logits(self, key, B=3, V=50):
+        return jax.random.normal(key, (B, V)) * 4.0
+
+    def test_fixed_key_is_deterministic(self):
+        lg = self._logits(KEY)
+        k = jax.random.PRNGKey(42)
+        a = dec.sample_logits(lg, k, temperature=0.8, top_k=10, top_p=0.9)
+        b = dec.sample_logits(lg, k, temperature=0.8, top_k=10, top_p=0.9)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == jnp.int32
+        assert np.all((np.asarray(a) >= 0) & (np.asarray(a) < 50))
+
+    def test_truncation_limits_collapse_to_argmax(self):
+        """top_k=1, tiny top_p, and tiny temperature each pin the draw to
+        the argmax token regardless of the key."""
+        lg = self._logits(KEY)
+        want = np.asarray(jnp.argmax(lg, -1))
+        for kw in (dict(top_k=1), dict(top_p=1e-6),
+                   dict(temperature=1e-7)):
+            for s in range(3):
+                got = dec.sample_logits(lg, jax.random.PRNGKey(s), **kw)
+                np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_top_k_restricts_support(self):
+        lg = self._logits(KEY, B=64)
+        allowed = np.asarray(jax.lax.top_k(lg, 5)[1])
+        got = np.asarray(dec.sample_logits(lg, jax.random.PRNGKey(3),
+                                           temperature=2.0, top_k=5))
+        assert all(got[i] in allowed[i] for i in range(got.shape[0]))
+
+    def test_decode_loop_sampled_is_reproducible_and_greedy_unchanged(self):
+        cfg = _cfg("llama3.2-1b")
+        params = dec.init_model(cfg, KEY)
+        B, S, gen = 2, 6, 5
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+
+        def run(key):
+            cache = dec.init_cache(cfg, B, 32, dtype=jnp.float32)
+            lg, cache = dec.prefill(params, cfg, toks, cache,
+                                    compute_dtype=jnp.float32)
+            tok = jnp.argmax(lg[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+            got, _, _ = dec.decode_loop(
+                params, cfg, tok, cache, jnp.int32(S), gen,
+                compute_dtype=jnp.float32, key=key,
+                temperature=0.9, top_k=20, top_p=0.95)
+            return np.asarray(got)
+
+        k = jax.random.PRNGKey(11)
+        a, b = run(k), run(k)
+        np.testing.assert_array_equal(a, b)       # fixed key → same tokens
+        assert np.all((a >= 0) & (a < cfg.vocab))
+        c = run(jax.random.PRNGKey(12))
+        # greedy path (key=None) is byte-identical to the pre-sampling
+        # loop: covered by test_loop_matches_stepping; here just pin that
+        # sampling actually depends on the key (vanishing odds otherwise)
+        assert not np.array_equal(a[:, 1:], c[:, 1:]) or gen == 1
+
+    def test_serve_sampling_reproducible_across_kv_impls(self):
+        from repro.launch.serve import serve
+
+        kw = dict(reduced=True, batch=2, prompt_len=8, gen=6, cache_len=32,
+                  temperature=0.8, top_k=12, top_p=0.9, sample_seed=5)
+        a = serve("llama3.2-1b", **kw)
+        b = serve("llama3.2-1b", **kw)
+        assert a["sampling"] and a["tokens"] == b["tokens"]
+        assert a["tokens_in_vocab"]
+        p = serve("llama3.2-1b", **kw, kv_impl="paged", page_size=4)
+        assert a["tokens"] == p["tokens"]   # sampling is kv-layout-blind
+
+
 class TestServeEndToEnd:
     def test_serve_paged_equals_dense_tokens(self):
         from repro.launch.serve import serve
