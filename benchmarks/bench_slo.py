@@ -1,0 +1,187 @@
+"""SLO load harness: trace-driven open-loop load on the serve path.
+
+Generates a deterministic workload — Zipfian prompt/output lengths
+(quantized to a few buckets, since exact-length prefill compiles once per
+distinct prompt length) with bursty Poisson arrivals (a two-state
+Markov-modulated process: quiet ↔ burst) — and drives
+:func:`repro.launch.serve.serve_continuous` open-loop through its
+``arrival_s`` seam.  Reports:
+
+* **TTFT** p50/p99 (arrival → first output token; first request per
+  length bucket pays jit compile, which is the realistic cold-start tail)
+  and **TPOT** p50/p99 (decode seconds per output token), read from the
+  ``serve.ttft_s`` / ``serve.tpot_s`` obs histograms and cross-checked
+  against the exact per-request lists ``serve_continuous`` returns
+  (agreement within the histogram's ``GROWTH`` error bound — the same
+  invariant tests/test_obs.py pins);
+* **goodput**: output tokens of SLO-met requests per wall second, with
+  generous absolute SLOs (CLI-settable) so the smoke gate — goodput > 0
+  with every request completed — is noise-immune on a shared box;
+* the live cost-model bridge (``obs.snapshot_resources``) fed by the
+  run's serve signals.
+
+  PYTHONPATH=src python benchmarks/bench_slo.py [--smoke] [--obs-dir D]
+  PYTHONPATH=src python -m benchmarks.run --only slo
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import random
+import time
+
+try:
+    from benchmarks.common import emit, write_artifact
+except ImportError:  # run directly: python benchmarks/bench_slo.py
+    from common import emit, write_artifact
+
+from repro import obs
+from repro.core.resources import CPU_CORE
+from repro.launch.serve import serve_continuous
+from repro.obs.metrics import GROWTH
+
+#: length buckets (few distinct values bound prefill recompiles); Zipf
+#: weight 1/rank^ZIPF_A makes the short bucket dominate, like real traffic
+PROMPT_BUCKETS = (8, 16, 32)
+GEN_BUCKETS = (4, 8, 16)
+ZIPF_A = 1.2
+
+
+def make_workload(n: int, *, seed: int = 0, mean_interarrival_s: float = 0.08,
+                  burst_factor: float = 4.0, p_flip: float = 0.25,
+                  ) -> tuple[list[tuple[int, int]], list[float]]:
+    """Deterministic (requests, arrival_s): Zipfian bucketed lengths,
+    bursty Poisson arrivals (burst periods run ``burst_factor``× the
+    quiet arrival rate; state flips with prob ``p_flip`` per arrival)."""
+    rng = random.Random(seed)
+    w = [1.0 / (k + 1) ** ZIPF_A for k in range(len(PROMPT_BUCKETS))]
+    reqs = [(rng.choices(PROMPT_BUCKETS, w)[0],
+             rng.choices(GEN_BUCKETS, w)[0]) for _ in range(n)]
+    t, burst, arrivals = 0.0, False, []
+    for _ in range(n):
+        rate = (burst_factor if burst else 1.0) / mean_interarrival_s
+        t += rng.expovariate(rate)
+        arrivals.append(t)
+        if rng.random() < p_flip:
+            burst = not burst
+    return reqs, arrivals
+
+
+def _check_quantiles(name: str, hist, values: list[float]) -> None:
+    """The histogram's bounded-relative-error contract against the exact
+    sample: each reported quantile within a factor GROWTH of the true
+    order statistic (same rank convention as Histogram.quantile)."""
+    vs = sorted(values)
+    for q in (0.5, 0.99):
+        est = hist.quantile(q)
+        rank = min(len(vs) - 1, max(0, math.ceil(q * len(vs)) - 1))
+        true = vs[rank]
+        lo, hi = true / GROWTH - 1e-12, true * GROWTH + 1e-12
+        if not (lo <= est <= hi):
+            raise RuntimeError(
+                f"{name} p{int(q * 100)}: histogram {est:.6g} vs exact "
+                f"{true:.6g} outside the {GROWTH:.3f}x bound")
+
+
+def run(smoke: bool = False, *, n_requests: int | None = None, seed: int = 0,
+        ttft_slo_s: float = 30.0, tpot_slo_s: float = 1.0) -> dict:
+    n = n_requests if n_requests is not None else (10 if smoke else 32)
+    reqs, arrivals = make_workload(n, seed=seed)
+    # the histograms are the cross-check target — the run needs obs on,
+    # and a clean registry so prior suites' serve metrics don't bleed in
+    was_enabled = obs.enabled()
+    obs.configure(enabled=True)
+    obs.REGISTRY.reset()
+    try:
+        out = serve_continuous(
+            "llama3.2-1b", slots=4, page_size=8, decode_chunk=4,
+            requests=reqs, arrival_s=arrivals,
+            max_seq_len=max(PROMPT_BUCKETS) + max(GEN_BUCKETS) + 4)
+    finally:
+        obs.configure(enabled=was_enabled)
+
+    ttft, tpot = out["ttft_s"], out["tpot_s"]
+    assert all(v is not None for v in ttft + tpot), "request never finished"
+    (_, h_ttft), = obs.REGISTRY.find("serve.ttft_s")
+    (_, h_tpot), = obs.REGISTRY.find("serve.tpot_s")
+    _check_quantiles("ttft", h_ttft, ttft)
+    _check_quantiles("tpot", h_tpot, tpot)
+
+    wall = out["wall_s"]
+    met = [i for i in range(n)
+           if ttft[i] <= ttft_slo_s and tpot[i] <= tpot_slo_s]
+    good_tokens = sum(reqs[i][1] for i in met)
+    goodput = good_tokens / max(wall, 1e-9)
+
+    emit("slo_ttft_p50", h_ttft.quantile(0.5) * 1e6,
+         f"p99={h_ttft.quantile(0.99):.3f}s (exact-list cross-check ok)")
+    emit("slo_tpot_p50", h_tpot.quantile(0.5) * 1e6,
+         f"p99={h_tpot.quantile(0.99):.3f}s")
+    emit("slo_goodput", 0.0,
+         f"{goodput:.1f}tok/s good ({len(met)}/{n} requests met "
+         f"ttft<={ttft_slo_s:.0f}s tpot<={tpot_slo_s:.1f}s; "
+         f"wall={wall:.1f}s burst-Poisson arrivals over "
+         f"{arrivals[-1]:.1f}s)")
+
+    # live cost-model bridge: the serve signals land in the exact
+    # ResourceType/LayerProfile shapes the scheduler consumes
+    snap = obs.snapshot_resources(CPU_CORE)
+    serve_sig = snap["serve"]
+    emit("slo_bridge", 0.0,
+         f"resource={snap['resource'].name} "
+         f"ttft_p99={serve_sig['ttft']['p99']:.3f}s "
+         f"pool={serve_sig['pool_pages_used']:.0f}/"
+         f"{serve_sig['pool_pages_total']:.0f}pages "
+         f"evictions={serve_sig['evictions']:.0f}")
+
+    completed = all(len_ == g for len_, (_, g) in zip(out["generated"], reqs))
+    if smoke:
+        if not completed:
+            raise RuntimeError(f"incomplete generations: {out['generated']}")
+        if goodput <= 0.0:
+            raise RuntimeError(f"goodput {goodput} not > 0")
+        print(f"# slo gate ok: goodput={goodput:.1f}tok/s, "
+              f"{len(met)}/{n} requests in SLO, quantiles within "
+              f"{GROWTH:.3f}x of exact")
+    return {"goodput_tok_s": goodput, "met": len(met), "n": n,
+            "wall_s": wall,
+            "ttft_p50_s": h_ttft.quantile(0.5),
+            "ttft_p99_s": h_ttft.quantile(0.99),
+            "tpot_p50_s": h_tpot.quantile(0.5),
+            "tpot_p99_s": h_tpot.quantile(0.99)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small workload + goodput/quantile gates")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ttft-slo", type=float, default=30.0,
+                    help="TTFT SLO seconds (generous: first request per "
+                         "length bucket pays jit compile)")
+    ap.add_argument("--tpot-slo", type=float, default=1.0,
+                    help="per-output-token SLO seconds")
+    ap.add_argument("--obs-dir", default=None,
+                    help="also write trace.json + metrics.jsonl here")
+    args = ap.parse_args()
+    if args.obs_dir:
+        obs.configure(run_dir=args.obs_dir)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    try:
+        summary = run(smoke=args.smoke, n_requests=args.requests,
+                      seed=args.seed, ttft_slo_s=args.ttft_slo,
+                      tpot_slo_s=args.tpot_slo)
+    except BaseException as e:
+        write_artifact("slo", ok=False, error=repr(e),
+                       seconds=time.time() - t0)
+        raise
+    if args.obs_dir:
+        summary["obs"] = obs.flush()
+    write_artifact("slo", ok=True, seconds=time.time() - t0, extra=summary)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,57 @@
-"""Shared benchmark helpers: CSV emission + standard fleet/job setup."""
+"""Shared benchmark helpers: CSV emission, device sync, JSON artifacts."""
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+#: rows emitted since the last reset — serialized into BENCH_<suite>.json
+_ROWS: list[dict] = []
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
     """The run.py contract: ``name,us_per_call,derived`` CSV rows."""
+    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": str(derived)})
     print(f"{name},{us_per_call:.1f},{derived}")
     sys.stdout.flush()
+
+
+def reset_rows() -> None:
+    """Start a fresh row window (run.py calls this per suite)."""
+    _ROWS.clear()
+
+
+def sync(x):
+    """``jax.block_until_ready`` on ``x`` (pytrees fine) — the fence every
+    timed region needs so the timer sees finished device work, not queued
+    dispatches.  Identity for host-only values / when jax is absent."""
+    try:
+        import jax
+    except ImportError:
+        return x
+    return jax.block_until_ready(x)
+
+
+def write_artifact(suite: str, *, ok: bool, error: str | None = None,
+                   seconds: float | None = None,
+                   extra: dict | None = None) -> str:
+    """Write the machine-readable ``BENCH_<suite>.json`` artifact: every
+    ``emit`` row since the last reset plus pass/fail — what CI uploads.
+    Directory comes from ``BENCH_ARTIFACT_DIR`` (default: cwd)."""
+    out_dir = os.environ.get("BENCH_ARTIFACT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    payload = {"suite": suite, "ok": bool(ok), "error": error,
+               "seconds": seconds, "unix_ts": time.time(),
+               "rows": list(_ROWS)}
+    if extra:
+        payload["extra"] = extra
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return path
 
 
 def timed(fn, *args, **kw):

@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure + roofline.
 
-Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit) and
+writes one machine-readable ``BENCH_<name>.json`` artifact per suite
+(rows + pass/fail + failure text; see benchmarks/common.write_artifact),
+which CI uploads.
 
   PYTHONPATH=src python -m benchmarks.run [--only table2,fig4,...]
 """
@@ -8,9 +11,12 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
 import traceback
+
+from benchmarks import common
 
 SUITES = [
     ("table2", "benchmarks.bench_table2_bf_vs_rl"),
@@ -23,6 +29,7 @@ SUITES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("ps", "benchmarks.bench_ps"),
     ("serve", "benchmarks.bench_serve"),
+    ("slo", "benchmarks.bench_slo"),
 ]
 
 
@@ -39,16 +46,18 @@ def main() -> None:
         if only and name not in only:
             continue
         t0 = time.time()
+        common.reset_rows()
         try:
-            import importlib
-
             mod = importlib.import_module(module)
             mod.run()
+            common.write_artifact(name, ok=True, seconds=time.time() - t0)
             print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
         except Exception:
             failures += 1
-            print(f"# {name} FAILED:\n{traceback.format_exc()}",
-                  file=sys.stderr)
+            err = traceback.format_exc(limit=16)
+            common.write_artifact(name, ok=False, error=err,
+                                  seconds=time.time() - t0)
+            print(f"# {name} FAILED:\n{err}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

@@ -31,10 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCH_IDS, get_config
 from repro.kernels.paged_attention import PagePool
 from repro.models import decoder as dec
 from repro.models.profile import kv_read_bytes_per_token
+from repro.obs import trace as obs_trace
 
 
 def serve(arch: str, *, reduced: bool = True, batch: int = 4,
@@ -72,8 +74,10 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     # prefill: ONE forward fills the cache (vs stepping the prompt
     # token-by-token through the decode path)
     t0 = time.time()
-    logits, cache = prefill_jit(params, prompts, cache)
-    jax.block_until_ready(logits)
+    with obs_trace.span("serve.prefill", "serve", batch=batch,
+                        prompt_len=prompt_len):
+        logits, cache = prefill_jit(params, prompts, cache)
+        jax.block_until_ready(logits)
     prefill_s = time.time() - t0
 
     sampling = temperature > 0.0
@@ -111,13 +115,16 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     t0 = time.time()
     done, idx, n_chunk = 0, prompt_len, 0
     while done < gen:
-        toks, tok, cache = loop_jit(params, tok, cache, jnp.int32(idx),
-                                    chunk_key(n_chunk))
-        outs.append(np.asarray(toks))       # one transfer per chunk
+        with obs_trace.span("serve.decode_chunk", "serve", chunk=chunk,
+                            n_chunk=n_chunk):
+            toks, tok, cache = loop_jit(params, tok, cache, jnp.int32(idx),
+                                        chunk_key(n_chunk))
+            outs.append(np.asarray(toks))   # one transfer per chunk
         done += chunk
         idx += chunk
         n_chunk += 1
     decode_s = time.time() - t0
+    obs.REGISTRY.counter("serve.tokens").inc(batch * gen)
     out = np.concatenate(outs, axis=1)[:, :gen]
 
     el = np.dtype(compute_dtype).itemsize
@@ -151,7 +158,8 @@ def serve_continuous(arch: str, *, reduced: bool = True,
                      slots: int = 4, page_size: int = 16,
                      num_pages: int | None = None,
                      max_seq_len: int | None = None, decode_chunk: int = 8,
-                     seed: int = 0, compute_dtype=jnp.float32) -> dict:
+                     seed: int = 0, compute_dtype=jnp.float32,
+                     arrival_s: list[float] | None = None) -> dict:
     """Continuous-batching serve over variable-length requests.
 
     Each request ``(prompt_len, gen_len)`` is admitted into a free batch
@@ -164,6 +172,16 @@ def serve_continuous(arch: str, *, reduced: bool = True,
 
     ``num_pages`` below full slot coverage oversubscribes the pool:
     admission blocks until evictions free enough pages.
+
+    ``arrival_s`` (optional, one offset per request, seconds from loop
+    start, non-decreasing) turns the FIFO queue into an open-loop arrival
+    process: a request becomes admissible only once its arrival time has
+    passed, which is what makes the per-request latency split meaningful
+    — TTFT (arrival → prefill done, first output token exists) and TPOT
+    (decode seconds per output token) come back in the result and land in
+    the ``serve.ttft_s`` / ``serve.tpot_s`` histograms the obs bridge and
+    ``benchmarks/bench_slo.py`` read.  Without it every request arrives
+    at t=0 (closed-loop, TTFT includes queueing as before).
     """
     cfg = dataclasses.replace(get_config(arch, reduced=reduced),
                               kv_impl="paged")
@@ -190,6 +208,10 @@ def serve_continuous(arch: str, *, reduced: bool = True,
                                         compute_dtype=compute_dtype)
     )
 
+    if arrival_s is not None and len(arrival_s) != len(requests):
+        raise ValueError(
+            f"arrival_s has {len(arrival_s)} entries for "
+            f"{len(requests)} requests")
     queue = deque(enumerate(requests))
     slot_req: list[list | None] = [None] * slots   # [rid, gen_remaining]
     cur_tok = np.zeros((slots, 1), np.int32)
@@ -202,6 +224,16 @@ def serve_continuous(arch: str, *, reduced: bool = True,
     toks_done = 0
     prefills = 0
     peak_pages = 0
+    reg = obs.REGISTRY
+    reg.gauge("serve.pool_pages_total").set(num_pages - 1)
+    first_tok_t: list[float | None] = [None] * len(requests)
+    ttft_s: list[float | None] = [None] * len(requests)
+    tpot_s: list[float | None] = [None] * len(requests)
+
+    def _gauges():
+        reg.gauge("serve.queue_depth").set(len(queue))
+        reg.gauge("serve.pool_pages_used").set(
+            (num_pages - 1) - pool.free_pages)
 
     def admit():
         nonlocal cache, prefills
@@ -209,6 +241,8 @@ def serve_continuous(arch: str, *, reduced: bool = True,
             if slot_req[s] is not None or not queue:
                 continue
             rid, (plen, g) = queue[0]
+            if arrival_s is not None and time.time() - t0 < arrival_s[rid]:
+                break                       # FIFO: head hasn't arrived yet
             need = plen + g + decode_chunk
             if not pool.can_admit(need):
                 if pool.pages_for(need) > pool.pages_per_seq:
@@ -228,26 +262,48 @@ def serve_continuous(arch: str, *, reduced: bool = True,
                                         (1, plen), 0, cfg.vocab)
             sub = dec.slot_cache(cache, s)
             sub = {**sub, "length": jnp.zeros((1,), jnp.int32)}
-            lg, sub = prefill_jit(params, prompt, sub)
+            with obs_trace.span("serve.prefill", "serve", rid=rid, slot=s,
+                                prompt_len=plen):
+                lg, sub = prefill_jit(params, prompt, sub)
+                cur_tok[s, 0] = int(np.argmax(np.asarray(
+                    lg[0, plen - 1, : cfg.vocab])))
             prefills += 1
             cache = dec.merge_slot_cache(cache, sub, s)
-            cur_tok[s, 0] = int(np.argmax(np.asarray(
-                lg[0, plen - 1, : cfg.vocab])))
+            # the np.asarray above synced the prefill: the first output
+            # token exists NOW — that's the TTFT edge
+            done_t = time.time()
+            first_tok_t[rid] = done_t
+            arrive = t0 + (arrival_s[rid] if arrival_s is not None else 0.0)
+            ttft_s[rid] = done_t - arrive
+            reg.histogram("serve.ttft_s").record(max(ttft_s[rid], 0.0))
+            reg.counter("serve.admissions").inc()
             lengths[s] = plen
             active[s] = True
             slot_req[s] = [rid, g]
+        _gauges()
 
     t0 = time.time()
     admit()
-    while any(active):
+    while any(active) or queue:
+        if not any(active):
+            # open-loop idle gap: sleep until the head request arrives
+            rid_next = queue[0][0]
+            wait = t0 + arrival_s[rid_next] - time.time()
+            if wait > 0:
+                time.sleep(wait)
+            admit()
+            continue
         peak_pages = max(peak_pages, (num_pages - 1) - pool.free_pages)
-        cache = {**cache,
-                 "page_table": jnp.asarray(pool.table),
-                 "active": jnp.asarray(active),
-                 "length": jnp.asarray(lengths)}
-        toks, ntok, cache = loop_jit(params, jnp.asarray(cur_tok), cache)
-        toks_h = np.asarray(toks)           # one transfer per chunk
+        with obs_trace.span("serve.decode_chunk", "serve",
+                            live=int(active.sum()), chunk=decode_chunk):
+            cache = {**cache,
+                     "page_table": jnp.asarray(pool.table),
+                     "active": jnp.asarray(active),
+                     "length": jnp.asarray(lengths)}
+            toks, ntok, cache = loop_jit(params, jnp.asarray(cur_tok), cache)
+            toks_h = np.asarray(toks)       # one transfer per chunk
         cur_tok = np.array(ntok)            # writable: admit() refills slots
+        harvest_t = time.time()
         for s in range(slots):
             if slot_req[s] is None:
                 continue
@@ -258,6 +314,7 @@ def serve_continuous(arch: str, *, reduced: bool = True,
             # (start_length, tokens) span is recorded in the hot loop
             kv_spans.append((int(lengths[s]), take))
             toks_done += take
+            reg.counter("serve.tokens").inc(take)
             lengths[s] += decode_chunk      # mirrors the device increment
             slot_req[s][1] = rem - decode_chunk
             if slot_req[s][1] <= 0:
@@ -265,8 +322,16 @@ def serve_continuous(arch: str, *, reduced: bool = True,
                 slot_req[s] = None
                 active[s] = False
                 lengths[s] = 0
+                reg.counter("serve.evictions").inc()
+                g = requests[rid][1]
+                tpot_s[rid] = ((harvest_t - first_tok_t[rid])
+                               / max(1, g))
+                reg.histogram("serve.tpot_s").record(max(tpot_s[rid], 0.0))
+                obs_trace.instant("serve.finish", "serve", rid=rid,
+                                  gen=g)
         admit()
     wall = time.time() - t0
+    _gauges()
 
     kv_bytes = sum(
         kv_read_bytes_per_token(cfg, start + i + 1,
@@ -293,6 +358,8 @@ def serve_continuous(arch: str, *, reduced: bool = True,
         "kv_bytes_per_token_dense": dense_bpt,
         "peak_pages_in_use": peak_pages,
         "pool_conserved": pool.free_pages == num_pages - 1,
+        "ttft_s": ttft_s, "tpot_s": tpot_s,
+        "arrival_s": arrival_s,
     }
 
 
@@ -316,7 +383,12 @@ def main() -> None:
     ap.add_argument("--sample-seed", type=int, default=None,
                     help="PRNG seed for sampling (default: --seed's value; "
                          "fixed seed => reproducible tokens)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="enable observability and write trace.json + "
+                         "metrics.jsonl to this directory")
     args = ap.parse_args()
+    if args.obs_dir:
+        obs.configure(run_dir=args.obs_dir)
     if args.continuous:
         out = serve_continuous(args.arch, reduced=args.reduced,
                                slots=args.batch)
@@ -326,6 +398,8 @@ def main() -> None:
                     kv_impl=args.kv_impl, temperature=args.temperature,
                     top_k=args.top_k, top_p=args.top_p,
                     sample_seed=args.sample_seed)
+    if args.obs_dir:
+        out["obs"] = obs.flush()
     print(json.dumps(out, indent=2))
 
 

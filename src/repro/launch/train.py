@@ -26,10 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config
 from repro.data import PrefetchLoader, SyntheticTokenDataset
 from repro.launch.steps import init_train_state, make_train_step
+from repro.obs import trace as obs_trace
 
 
 def train(arch: str, *, reduced: bool = True, steps: int = 50,
@@ -50,12 +52,19 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
                                       compute_dtype=compute_dtype))
 
     losses = []
+    reg = obs.REGISTRY
     t0 = time.time()
     for i in range(steps):
+        td = time.time()
         batch_np = next(loader)
-        jbatch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        params, opt_state, metrics = step_fn(params, opt_state, jbatch)
-        losses.append(float(metrics["loss"]))
+        reg.histogram("train.data_s").record(time.time() - td)
+        ts = time.time()
+        with obs_trace.span("train.step", "train", step=i):
+            jbatch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, jbatch)
+            # float() syncs the step — the histogram sees real step time
+            losses.append(float(metrics["loss"]))
+        reg.histogram("train.step_s").record(time.time() - ts)
         if log_every and (i % log_every == 0 or i == steps - 1):
             print(f"step {i:4d} loss {losses[-1]:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
@@ -167,7 +176,15 @@ def main() -> None:
     ap.add_argument("--ps-staleness-bound", type=int, default=8,
                     help="max updates a pull may miss during live "
                          "migration (0 = full dual-write)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="enable observability and write trace.json + "
+                         "metrics.jsonl to this directory (multiproc PS "
+                         "workers inherit the switch and ship their spans "
+                         "back as separate pid lanes)")
     args = ap.parse_args()
+    if args.obs_dir:
+        # before any transport spawn, so shard workers inherit REPRO_OBS
+        obs.configure(run_dir=args.obs_dir)
     if args.sparse_ps:
         summary = train_sparse_ps(
             steps=args.steps, batch=args.batch, lr=args.lr,
@@ -186,6 +203,8 @@ def main() -> None:
                         lr=args.lr if args.lr is not None else 3e-4,
                         microbatch=args.microbatch,
                         checkpoint_dir=args.checkpoint_dir)
+    if args.obs_dir:
+        summary["obs"] = obs.flush()
     print(json.dumps(summary, indent=2))
 
 

@@ -1,0 +1,86 @@
+"""Unified tracing + metrics spine (``repro.obs``).
+
+Zero-dependency observability for the whole system: thread-safe metric
+registries with streaming quantiles (:mod:`repro.obs.metrics`), ring-
+buffered span tracing exported as Perfetto-loadable Chrome trace JSON —
+including per-process buffers shipped back from spawned PS shard workers
+(:mod:`repro.obs.trace`), run-directory export (:mod:`repro.obs.export`)
+and the live-metrics → cost-model bridge (:mod:`repro.obs.bridge`).
+
+Session control lives here:
+
+* :func:`configure` — enable/disable instrumentation and pick a run
+  directory; sets ``REPRO_OBS`` so shard workers spawned afterwards
+  inherit the state;
+* :func:`enabled` — the one branch every instrumentation site checks;
+* :func:`flush` — write ``trace.json`` + append a ``metrics.jsonl``
+  snapshot to the configured run directory.
+
+The package init stays jax-free (and ``metrics``/``trace`` are stdlib-
+only): the spawned PS shard worker imports this through
+``repro.ps.server``'s numpy-only path — pinned in
+``tests/test_ps_transport.py``.  ``bridge`` (which touches
+``repro.core``) resolves lazily.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.obs import metrics, trace
+from repro.obs.metrics import REGISTRY, Registry
+from repro.obs.trace import BUFFER, instant, span
+
+__all__ = [
+    "BUFFER", "REGISTRY", "Registry", "configure", "enabled", "flush",
+    "instant", "metrics", "run_dir", "snapshot_resources", "span", "trace",
+]
+
+_run_dir: str | None = None
+
+
+def enabled() -> bool:
+    return trace.enabled()
+
+
+def run_dir() -> str | None:
+    return _run_dir
+
+
+def configure(*, enabled: bool | None = None,
+              run_dir: str | None = None) -> None:
+    """Flip instrumentation on/off and/or set the export directory.
+
+    Passing ``run_dir`` implies ``enabled=True`` unless overridden.
+    The enabled state is mirrored into the ``REPRO_OBS`` environment
+    variable so shard worker processes spawned from here on inherit it.
+    """
+    global _run_dir
+    if run_dir is not None:
+        _run_dir = run_dir
+        if enabled is None:
+            enabled = True
+    if enabled is not None:
+        trace.set_enabled(enabled)
+        REGISTRY.enabled = enabled
+        os.environ["REPRO_OBS"] = "1" if enabled else "0"
+
+
+def flush(extra: dict | None = None) -> dict | None:
+    """Export the session to the configured run directory: write the
+    merged Chrome trace and append one metrics snapshot.  Returns the
+    paths (``None`` when no run directory is configured)."""
+    if _run_dir is None:
+        return None
+    from repro.obs import export
+
+    return {"trace": export.write_trace(_run_dir),
+            "metrics": export.write_metrics(_run_dir, extra)}
+
+
+def snapshot_resources(base, **kw):
+    """Lazy re-export of :func:`repro.obs.bridge.snapshot_resources`
+    (keeps ``repro.core`` out of the shard-worker import path)."""
+    from repro.obs.bridge import snapshot_resources as _snap
+
+    return _snap(base, **kw)

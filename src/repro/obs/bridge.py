@@ -1,0 +1,116 @@
+"""Live-metrics → cost-model bridge (the reactive re-planner's seam).
+
+HeterPS schedules against *analytic* ``ResourceType``/``LayerProfile``
+constants computed once, offline (``core/resources.py`` /
+``core/profiles.py``).  This module turns the obs spine's **measured**
+signals into those exact shapes, so a future re-planner can hand the
+fused RL search live profiles instead of nominal ones:
+
+* :func:`snapshot_resources` — one coherent snapshot: a ``ResourceType``
+  whose bandwidth terms are re-anchored to measured PS traffic (the same
+  arithmetic as :meth:`repro.ps.telemetry.PSTelemetry.to_resource`, read
+  from the metric registries), measured embedding-layer ODT seconds, and
+  the serve-side SLO signals (queue depth, page-pool occupancy, TTFT /
+  TPOT percentiles) the admission policy would tune against;
+* :func:`apply_measured_odt` — graft measured ``(sync, act)`` seconds
+  onto a ``LayerProfile``, index-aligned with the fleet, exactly what
+  ``core/cost_model.py`` consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.profiles import LayerProfile
+from repro.core.resources import ResourceType
+from repro.obs import metrics as obs_metrics
+
+
+def _ps_traffic(registries=None) -> dict:
+    """Aggregate PS pull/push traffic over every live registry carrying
+    ``PSTelemetry``-named counters (``ps.bytes``/``ps.seconds`` labeled
+    ``dir=pull|push``, one shard per label) — per-registry ``seconds`` is
+    the max over shards (shards serve concurrently), matching
+    ``PSTelemetry.totals``; registries (independent tables) add up."""
+    out = {d: {"bytes": 0.0, "seconds": 0.0, "rows": 0.0}
+           for d in ("pull", "push")}
+    for reg in (registries if registries is not None
+                else obs_metrics.all_registries()):
+        for d in ("pull", "push"):
+            per_shard_secs = [m.value for lab, m in reg.find("ps.seconds")
+                              if lab.get("dir") == d]
+            if not per_shard_secs:
+                continue
+            out[d]["seconds"] += max(per_shard_secs)
+            out[d]["bytes"] += sum(m.value for lab, m in reg.find("ps.bytes")
+                                   if lab.get("dir") == d)
+            out[d]["rows"] += sum(m.value for lab, m in reg.find("ps.rows")
+                                  if lab.get("dir") == d)
+    return out
+
+
+def _serve_signals(registry=None) -> dict:
+    reg = registry if registry is not None else obs_metrics.REGISTRY
+    sig: dict = {
+        "queue_depth": reg.value("serve.queue_depth"),
+        "pool_pages_used": reg.value("serve.pool_pages_used"),
+        "pool_pages_total": reg.value("serve.pool_pages_total"),
+        "evictions": reg.value("serve.evictions"),
+        "admissions": reg.value("serve.admissions"),
+        "tokens": reg.value("serve.tokens"),
+    }
+    for name, key in (("serve.ttft_s", "ttft"), ("serve.tpot_s", "tpot")):
+        for _, hist in reg.find(name):
+            sig[key] = hist.snapshot()
+    return sig
+
+
+def snapshot_resources(base: ResourceType, *, telemetry=None,
+                       num_examples: int | None = None,
+                       registry=None) -> dict:
+    """Turn live metrics into the shapes ``core/profiles.py`` consumes.
+
+    Returns ``{"resource": ResourceType, "embedding_odt": (sync, act),
+    "serve": {...}, "ps": {...}}``.  ``telemetry`` (a ``PSTelemetry``)
+    takes precedence for the PS side; otherwise the traffic is read from
+    the metric registries.  Bandwidth terms with no traffic keep the
+    ``base`` constants — a cold snapshot degrades to the analytic model.
+    """
+    if telemetry is not None:
+        res = telemetry.to_resource(base)
+        odt = (telemetry.embedding_odt(num_examples)
+               if num_examples else (0.0, 0.0))
+        t = telemetry.totals()
+        ps = {d: {k: t[d][k] for k in ("bytes", "seconds", "rows")}
+              for d in ("pull", "push")}
+    else:
+        ps = _ps_traffic()
+        pull_s, push_s = ps["pull"]["seconds"], ps["push"]["seconds"]
+        ingest = ps["pull"]["bytes"] / pull_s if pull_s > 0 else 0.0
+        net_b = ps["pull"]["bytes"] + ps["push"]["bytes"]
+        net_s = pull_s + push_s
+        net = net_b / net_s if net_s > 0 else 0.0
+        res = dataclasses.replace(
+            base, name=base.name + "+obs",
+            ingest_bw=ingest if ingest > 0 else base.ingest_bw,
+            net_bw=net if net > 0 else base.net_bw)
+        if num_examples:
+            from repro.core.profiles import B_O
+
+            per_ex = net_s / num_examples
+            act_per_ex = pull_s / num_examples
+            odt = (per_ex * B_O, act_per_ex * B_O)
+        else:
+            odt = (0.0, 0.0)
+    return {"resource": res, "embedding_odt": odt,
+            "serve": _serve_signals(registry), "ps": ps}
+
+
+def apply_measured_odt(profile: LayerProfile, sync: float,
+                       act: float) -> LayerProfile:
+    """``profile`` with its per-type ODT terms replaced by one measured
+    ``(sync, act)`` pair, broadcast across the fleet's resource types —
+    the drop-in the scheduler's cost model consumes."""
+    n = len(profile.oct)
+    return dataclasses.replace(
+        profile, odt_sync=(float(sync),) * n, odt_act=(float(act),) * n)

@@ -30,6 +30,9 @@ import queue
 import threading
 import time
 
+from repro import obs
+from repro.obs import trace as obs_trace
+
 #: stream-end marker (same pattern as data.pipeline's sentinel)
 _STOP = object()
 
@@ -64,7 +67,10 @@ class PSClient:
         def puller():
             try:
                 for batch in loader:
-                    rows = self.table.pull(batch[self._ids_key])
+                    ids = batch[self._ids_key]
+                    with obs_trace.span("ps.client.pull", "ps",
+                                        step=self.steps_pulled):
+                        rows = self.table.pull(ids)
                     with self._lock:
                         self.steps_pulled += 1
                     placed = False
@@ -104,7 +110,9 @@ class PSClient:
                     return
                 ids, grads, lr, dedup = item
                 try:
-                    self.table.push(ids, grads, lr=lr, dedup=dedup)
+                    with obs_trace.span("ps.client.push_apply", "ps",
+                                        step=self.steps_pushed):
+                        self.table.push(ids, grads, lr=lr, dedup=dedup)
                 except BaseException as e:  # surface in flush()/close()
                     self._pusher_error = e
                     return
@@ -175,32 +183,39 @@ class PSClient:
             return
         self._closed = True
         drain_error: BaseException | None = None
-        try:
-            if drain and self._pusher_error is None:
-                self.flush(timeout=timeout)
-        except (TimeoutError, RuntimeError) as e:
-            drain_error = e
-        finally:
-            # even if the drain raised, stop both threads — a failed close
-            # must not leave the puller/pusher running against the table
-            self._stop.set()
-            # wake the pusher; drop a stale (unapplied) push to make room
-            # if the queue is full
-            while True:
-                try:
-                    self._push_q.put(_STOP, timeout=self._put_timeout)
-                    break
-                except queue.Full:
+        sp = obs_trace.span(
+            "ps.client.drain", "ps",
+            pending=max(0, self._pushes_enqueued - self.steps_pushed))
+        with sp:
+            try:
+                if drain and self._pusher_error is None:
+                    self.flush(timeout=timeout)
+            except (TimeoutError, RuntimeError) as e:
+                drain_error = e
+            finally:
+                # even if the drain raised, stop both threads — a failed
+                # close must not leave the puller/pusher running against
+                # the table
+                self._stop.set()
+                # wake the pusher; drop a stale (unapplied) push to make
+                # room if the queue is full
+                while True:
                     try:
-                        self._push_q.get_nowait()
-                    except queue.Empty:
-                        pass
-            self._puller.join(timeout)
-            self._pusher.join(timeout)
-        with self._lock:
-            self._pushes_dropped = max(
-                0, self._pushes_enqueued - self.steps_pushed)
-            dropped = self._pushes_dropped
+                        self._push_q.put(_STOP, timeout=self._put_timeout)
+                        break
+                    except queue.Full:
+                        try:
+                            self._push_q.get_nowait()
+                        except queue.Empty:
+                            pass
+                self._puller.join(timeout)
+                self._pusher.join(timeout)
+            with self._lock:
+                self._pushes_dropped = max(
+                    0, self._pushes_enqueued - self.steps_pushed)
+                dropped = self._pushes_dropped
+            sp.args["dropped"] = dropped
+        self._final_telemetry(dropped)
         # a pusher failure means queued gradients were dropped — surface it
         # even when the training loop already issued its last push()
         if self._pusher_error is not None:
@@ -215,6 +230,15 @@ class PSClient:
             raise RuntimeError(
                 f"pusher thread exited with pushes pending: {dropped} "
                 f"push(es) dropped") from drain_error
+
+    def _final_telemetry(self, dropped: int) -> None:
+        """Session-registry counters + final metrics snapshot at close —
+        no-ops when obs is disabled / no run dir is configured."""
+        reg = obs.REGISTRY
+        reg.counter("ps.client.steps_pulled").inc(self.steps_pulled)
+        reg.counter("ps.client.steps_pushed").inc(self.steps_pushed)
+        reg.counter("ps.client.pushes_dropped").inc(dropped)
+        obs.flush()
 
     def stats(self) -> dict:
         with self._lock:

@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.parallel.ps import dedup_rows
 from repro.ps.server import OPTIMIZERS
 from repro.ps.transport import PSShardLost, Transport, make_transport
@@ -201,6 +202,9 @@ class ElasticPSFleet:
         self.events.append(ev)
         if self.telemetry is not None:
             self.telemetry.record_event(ev)
+        # lifecycle markers on the trace timeline (join/leave/kill/
+        # migrate/recover show up as instants in the fleet's lane)
+        obs_trace.instant("ps.fleet." + kind, "ps", **fields)
 
     def _check_ids(self, ids_np: np.ndarray) -> None:
         if ids_np.size and (ids_np.min() < 0

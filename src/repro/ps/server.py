@@ -30,9 +30,17 @@ snapshot    bucket                                 rows, opt, acked
 install     bucket, rows, opt, acked               ok
 drop        bucket                                 ok
 stats       —                                      buckets, rows, counters
+obs         —                                      events (trace drain), pid
 demote      —                                      ok (tiering hint, no-op)
 shutdown    —                                      ok (event loop exits)
 ==========  =====================================  =======================
+
+Observability: every handled op records a span into the server's *own*
+:class:`~repro.obs.trace.TraceBuffer` (gated on the session obs switch,
+which spawned workers inherit via ``REPRO_OBS``); the ``obs`` op drains
+that buffer so the client side can merge worker timelines — stamped with
+the worker's pid — into the main process trace
+(:meth:`repro.ps.transport.Transport.collect_obs`).
 
 Every reply carries ``shard``; failures come back as ``{"err": ...}``
 instead of killing the event loop (a bad request must not look like a
@@ -41,9 +49,12 @@ crashed shard to the failure detector).
 
 from __future__ import annotations
 
+import os
 import traceback
 
 import numpy as np
+
+from repro.obs import trace as obs_trace
 
 #: optimizer names accepted by :class:`ShardServer` (``"none"`` applies
 #: pre-scaled updates verbatim — the client-side-SGD mode ShardedTable
@@ -123,6 +134,8 @@ class ShardServer:
         self.buckets: dict[int, dict] = {}
         self.counters = {"pulls": 0, "pushes": 0, "replica_pushes": 0,
                          "pull_rows": 0, "push_rows": 0}
+        #: per-server trace ring — drained over the wire by the "obs" op
+        self.trace = obs_trace.TraceBuffer(capacity=16384)
 
     # --- per-op handlers -------------------------------------------------
     def _bucket(self, b: int) -> dict:
@@ -142,6 +155,16 @@ class ShardServer:
 
     def handle(self, msg: dict) -> dict:
         op = msg["op"]
+        if op == "obs":
+            # trace drain — not itself spanned (a span recorded mid-drain
+            # would straddle the buffer handoff)
+            return {"shard": self.shard_id, "ok": True,
+                    "pid": os.getpid(), "events": self.trace.drain()}
+        with obs_trace.span(f"ps.shard.{op}", "ps", buffer=self.trace,
+                            shard=self.shard_id):
+            return self._handle_op(op, msg)
+
+    def _handle_op(self, op: str, msg: dict) -> dict:
         out: dict = {"shard": self.shard_id, "ok": True}
         if op == "pull":
             ids = msg["ids"]
@@ -214,6 +237,10 @@ def shard_main(conn, shard_id: int, dim: int, optimizer: str = "none",
     """Event loop of a shard worker process: recv → handle → send until a
     ``shutdown`` op (clean exit) or a closed pipe (client died)."""
     server = ShardServer(shard_id, dim, optimizer=optimizer, hyper=hyper)
+    if obs_trace.enabled():
+        # name this worker's pid lane in the merged Perfetto trace (only
+        # here — an in-process server shares the client's pid)
+        obs_trace.label_process(f"ps-shard-{shard_id}", buffer=server.trace)
     while True:
         try:
             msg = conn.recv()

@@ -13,6 +13,18 @@ bridges feed the measurements back:
   seconds per ``B_o`` profiling window, the exact shape
   ``LayerProfile.odt_sync``/``odt_act`` consume (``core/profiles.py``).
 
+Storage is the obs spine: each :class:`PSTelemetry` owns a private
+always-enabled :class:`repro.obs.metrics.Registry` (these counters are
+load-bearing — the cost-model bridge and ``bench_ps`` read them — so
+they record regardless of the session's obs switch), and
+:class:`ShardCounters` is a per-shard/per-direction *view* over the
+registry's ``ps.ops/rows/bytes/seconds/hot_rows`` counters.  Whole-
+process metric snapshots (``repro.obs.export``) therefore include PS
+traffic for free, and ``repro.obs.bridge.snapshot_resources`` can
+recompute the same bandwidths straight from the registry — the
+arithmetic here is unchanged from the pre-registry implementation
+(bit-compatibility pinned in ``tests/test_obs.py``).
+
 Counters are updated from the client's puller/pusher threads; a lock
 keeps the row/byte/time triples coherent.
 """
@@ -20,36 +32,90 @@ keeps the row/byte/time triples coherent.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 
 import numpy as np
 
 from repro.core.profiles import B_O
 from repro.core.resources import ResourceType
+from repro.obs import metrics as obs_metrics
+
+#: distinct registry name per telemetry instance — concurrent tables
+#: (e.g. the overlap benchmark's sync + async runs) must not collide
+_SEQ = itertools.count()
 
 
-@dataclasses.dataclass
 class ShardCounters:
-    """Cumulative traffic of one PS shard (one direction)."""
+    """Cumulative traffic of one PS shard (one direction) — a view over
+    the owning registry's counters."""
 
-    ops: int = 0
-    rows: int = 0
-    bytes: int = 0
-    seconds: float = 0.0   # wall time this shard had an op in flight
-    hot_rows: int = 0      # rows served from the DEVICE tier
+    __slots__ = ("_ops", "_rows", "_bytes", "_seconds", "_hot")
+
+    def __init__(self, registry: obs_metrics.Registry, direction: str,
+                 shard: int):
+        lab = {"dir": direction, "shard": shard}
+        self._ops = registry.counter("ps.ops", **lab)
+        self._rows = registry.counter("ps.rows", **lab)
+        self._bytes = registry.counter("ps.bytes", **lab)
+        self._seconds = registry.counter("ps.seconds", **lab)
+        self._hot = registry.counter("ps.hot_rows", **lab)
+
+    @property
+    def ops(self) -> int:
+        return int(self._ops.value)
+
+    @property
+    def rows(self) -> int:
+        return int(self._rows.value)
+
+    @property
+    def bytes(self) -> int:
+        return int(self._bytes.value)
+
+    @property
+    def seconds(self) -> float:
+        """Wall time this shard had an op in flight."""
+        return self._seconds.value
+
+    @property
+    def hot_rows(self) -> int:
+        """Rows served from the DEVICE tier."""
+        return int(self._hot.value)
+
+    def add(self, *, ops: int = 0, rows: int = 0, bytes_: int = 0,
+            seconds: float = 0.0, hot_rows: int = 0) -> None:
+        if ops:
+            self._ops.inc(ops)
+        if rows:
+            self._rows.inc(rows)
+        if bytes_:
+            self._bytes.inc(bytes_)
+        if seconds:
+            self._seconds.inc(seconds)
+        if hot_rows:
+            self._hot.inc(hot_rows)
 
     def bandwidth(self) -> float:
-        return self.bytes / self.seconds if self.seconds > 0 else 0.0
+        secs = self.seconds
+        return self.bytes / secs if secs > 0 else 0.0
 
 
 class PSTelemetry:
     """Pull/push byte + latency accounting for an N-shard table."""
 
-    def __init__(self, num_shards: int):
+    def __init__(self, num_shards: int, *,
+                 registry: obs_metrics.Registry | None = None):
         self.num_shards = num_shards
+        #: always-enabled by default: these counters feed the cost model
+        #: and benchmarks even when session-wide obs is off
+        self.registry = registry if registry is not None else \
+            obs_metrics.Registry(f"ps{next(_SEQ)}", enabled=True)
         self._lock = threading.Lock()
-        self.pull = [ShardCounters() for _ in range(num_shards)]
-        self.push = [ShardCounters() for _ in range(num_shards)]
+        self.pull = [ShardCounters(self.registry, "pull", s)
+                     for s in range(num_shards)]
+        self.push = [ShardCounters(self.registry, "push", s)
+                     for s in range(num_shards)]
         self.events: list[dict] = []
 
     def ensure(self, num_shards: int) -> None:
@@ -58,8 +124,9 @@ class PSTelemetry:
         stays additive)."""
         with self._lock:
             while self.num_shards < num_shards:
-                self.pull.append(ShardCounters())
-                self.push.append(ShardCounters())
+                s = self.num_shards
+                self.pull.append(ShardCounters(self.registry, "pull", s))
+                self.push.append(ShardCounters(self.registry, "push", s))
                 self.num_shards += 1
 
     def record_event(self, event: dict) -> None:
@@ -78,13 +145,10 @@ class PSTelemetry:
             for s in range(min(self.num_shards, len(rows))):
                 if rows[s] == 0:
                     continue
-                c = side[s]
-                c.ops += 1
-                c.rows += int(rows[s])
-                c.bytes += int(bytes_[s])
-                c.seconds += seconds
-                if hot_rows is not None:
-                    c.hot_rows += int(hot_rows[s])
+                side[s].add(
+                    ops=1, rows=int(rows[s]), bytes_=int(bytes_[s]),
+                    seconds=seconds,
+                    hot_rows=int(hot_rows[s]) if hot_rows is not None else 0)
 
     # --- reporting ------------------------------------------------------
     def _totals(self, side) -> dict:

@@ -32,6 +32,7 @@ import threading
 import time
 from collections import deque
 
+from repro.obs import trace as obs_trace
 from repro.ps.server import ShardServer, shard_main
 
 
@@ -108,7 +109,38 @@ class Transport:
     def live_shards(self) -> set[int]:
         raise NotImplementedError
 
+    def collect_obs(self) -> list[dict]:
+        """Drain every live shard's trace buffer into the caller's global
+        trace buffer (:data:`repro.obs.trace.BUFFER`) — multiproc worker
+        events arrive stamped with the worker's pid, giving the merged
+        Chrome trace one lane per shard process.  Best-effort: a shard
+        lost mid-drain just contributes nothing.  No-op (and no RPCs)
+        when observability is disabled."""
+        if not obs_trace.enabled():
+            return []
+        events: list[dict] = []
+        for s in sorted(self.live_shards):
+            try:
+                reply = self.request(s, {"op": "obs"})
+            except (PSShardError, PSShardLost):
+                continue
+            events.extend(reply.get("events", ()))
+        obs_trace.BUFFER.extend(events)
+        return events
+
+    def _drain_shard_obs(self, shard_id: int) -> None:
+        """Best-effort trace drain of one shard (graceful-stop prologue,
+        so a leaving shard's spans survive into the merged trace)."""
+        if not obs_trace.enabled():
+            return
+        try:
+            reply = self.request(shard_id, {"op": "obs"})
+        except (PSShardError, PSShardLost):
+            return
+        obs_trace.BUFFER.extend(reply.get("events", ()))
+
     def close(self) -> None:
+        self.collect_obs()
         for s in sorted(self.live_shards):
             try:
                 self.stop_shard(s)
