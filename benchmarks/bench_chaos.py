@@ -1,0 +1,177 @@
+"""Chaos soak benchmark: fault masking, failure detection latency, and
+crash-consistent checkpoint/restore under a seeded fault schedule.
+
+Three gated measurements over the elastic CTR trainer:
+
+* **masking** — a schedule of delayed / dropped / duplicated / transient
+  faults must train to a **bit-exact** loss trajectory vs the fault-free
+  run (the retry layer + server seq-dedup absorb everything), with the
+  injected-fault and retry counts reported;
+* **kill-both soak** — a correlated crash of a bucket's primary *and*
+  backup mid-run must restore from the newest unified checkpoint and
+  replay to the fault-free trajectory, with the soak's wall-clock
+  overhead vs the calm run reported;
+* **detection latency** — the multiproc heartbeat must notice a
+  SIGKILLed worker (no request traffic at all) well inside its deadline.
+
+  PYTHONPATH=src python benchmarks/bench_chaos.py [--smoke]
+  PYTHONPATH=src python -m benchmarks.run --only chaos
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import tempfile
+import time
+
+try:
+    from benchmarks.common import emit, write_artifact
+except ImportError:   # direct `python benchmarks/bench_chaos.py` run
+    from common import emit, write_artifact
+
+#: every maskable fault kind, interleaved (same pins as
+#: tests/test_chaos.py).  Each rule's budget stays below the retry
+#: policy's max_attempts so no single request can burn every attempt —
+#: more chaos comes from more windows, not bigger budgets.
+MASK_SCHED = ("drop_reply,op=grad,after=10,times=2;"
+              "drop_reply,op=grad,after=120,times=2;"
+              "dup_reply,op=pull,after=5,times=2;"
+              "dup_reply,op=pull,after=150,times=2;"
+              "recv_error,after=30,times=2;"
+              "recv_error,after=200,times=2;"
+              "delay,delay_s=0.001,prob=0.3")
+
+#: correlated primary+backup loss (attempt ~170 ≈ step 14 on 3 shards)
+KILL_BOTH = ("crash,op=grad,shard=0,after=170,times=1;"
+             "crash,op=grad,shard=1,after=170,times=1")
+
+
+def _drift(a, b) -> float:
+    return max(abs(x - y) for x, y in zip(a, b))
+
+
+def bench_fault_masking(cfg, *, steps: int, fault_seed: int) -> None:
+    from repro.ps.workload import train_ctr_elastic
+
+    kw = dict(steps=steps, num_shards=3, optimizer="adagrad", mode="sync")
+    t0 = time.perf_counter()
+    base = train_ctr_elastic(cfg, **kw)
+    calm_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    chaotic = train_ctr_elastic(cfg, **kw, fault_schedule=MASK_SCHED,
+                                fault_seed=fault_seed)
+    chaos_s = time.perf_counter() - t0
+    n_inj = len(chaotic["injections"])
+    retries = chaotic["transport_counters"]["retries"]
+    drift = _drift(chaotic["losses"], base["losses"])
+    emit("chaos_masked_faults", chaos_s / steps * 1e6,
+         f"{n_inj} faults injected, {retries} retries, "
+         f"{chaos_s / calm_s:.2f}x calm wall time")
+    emit("chaos_masked_drift", drift * 1e6,
+         f"max |loss drift| vs fault-free run = {drift:.2e} (target 0)")
+    if n_inj == 0:
+        raise RuntimeError("fault schedule never fired — dead benchmark")
+    if drift != 0.0:
+        raise RuntimeError(
+            f"masked faults drifted the loss trajectory by {drift:.3e}")
+
+
+def bench_kill_both_restore(cfg, *, steps: int, ckpt_every: int,
+                            fault_seed: int) -> None:
+    from repro.ps.workload import train_ctr_elastic
+
+    kw = dict(steps=steps, num_shards=3, optimizer="adagrad", mode="sync")
+    t0 = time.perf_counter()
+    base = train_ctr_elastic(cfg, **kw)
+    calm_s = time.perf_counter() - t0
+    with tempfile.TemporaryDirectory(prefix="bench-chaos-ckpt-") as d:
+        t0 = time.perf_counter()
+        soak = train_ctr_elastic(cfg, **kw, fault_schedule=KILL_BOTH,
+                                 fault_seed=fault_seed, ckpt_dir=d,
+                                 ckpt_every=ckpt_every)
+        soak_s = time.perf_counter() - t0
+        residue = [e for e in os.listdir(d) if ".tmp-" in e]
+    n_ckpt = len(soak["checkpoints"])
+    ckpt_mb = sum(b for _, b in soak["checkpoints"]) / 1e6
+    drift = _drift(soak["losses"], base["losses"])
+    emit("chaos_killboth_restore", soak_s / steps * 1e6,
+         f"{soak['restores']} restore(s), {n_ckpt} ckpts ({ckpt_mb:.1f}MB), "
+         f"{soak_s / calm_s:.2f}x calm wall time")
+    emit("chaos_killboth_drift", drift * 1e6,
+         f"max |loss drift| after restore+replay = {drift:.2e} (target 0)")
+    if soak["restores"] < 1:
+        raise RuntimeError("kill-both schedule never forced a restore")
+    if drift != 0.0:
+        raise RuntimeError(
+            f"restore+replay drifted the loss trajectory by {drift:.3e}")
+    if residue:
+        raise RuntimeError(f"checkpoint staging residue left behind: "
+                           f"{residue}")
+
+
+def bench_detection_latency(*, heartbeat_s: float = 0.05,
+                            budget_s: float = 2.0) -> None:
+    from repro.ps.transport import MultiprocTransport
+
+    tr = MultiprocTransport(heartbeat_s=heartbeat_s)
+    try:
+        tr.add_shard(0, dim=8)
+        tr.add_shard(1, dim=8)
+        os.kill(tr._shards[0].proc.pid, signal.SIGKILL)
+        t0 = time.perf_counter()
+        while 0 in tr.live_shards:
+            if time.perf_counter() - t0 > budget_s:
+                raise RuntimeError(
+                    f"heartbeat missed a SIGKILLed worker for {budget_s}s")
+            time.sleep(0.005)
+        latency = time.perf_counter() - t0
+    finally:
+        tr.close()
+    emit("chaos_detection_latency", latency * 1e6,
+         f"SIGKILL -> heartbeat eviction in {latency * 1e3:.0f}ms "
+         f"(period {heartbeat_s * 1e3:.0f}ms, budget {budget_s:.1f}s)")
+
+
+def run(smoke: bool = False, fault_seed: int | None = None) -> None:
+    from repro.ps.workload import CTRConfig
+
+    if fault_seed is None:
+        fault_seed = int(os.environ.get("CHAOS_FAULT_SEED", "0"))
+    if smoke:
+        cfg = CTRConfig(vocab=5_000, emb_dim=8, slots=8, tower=(32,),
+                        batch=64)
+        steps = 30
+    else:
+        cfg = CTRConfig(vocab=50_000, emb_dim=16, slots=8, tower=(64,),
+                        batch=128)
+        steps = 60
+    emit("chaos_seed", float(fault_seed), f"fault_seed={fault_seed}")
+    bench_fault_masking(cfg, steps=steps, fault_seed=fault_seed)
+    bench_kill_both_restore(cfg, steps=steps, ckpt_every=5,
+                            fault_seed=fault_seed)
+    bench_detection_latency()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI (<1 min)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seed for probabilistic fault rules (default: "
+                         "$CHAOS_FAULT_SEED or 0)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    try:
+        run(smoke=args.smoke, fault_seed=args.fault_seed)
+    except BaseException as e:
+        write_artifact("chaos", ok=False, error=repr(e),
+                       seconds=time.time() - t0)
+        raise
+    write_artifact("chaos", ok=True, seconds=time.time() - t0)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ SUITES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("kernels", "benchmarks.bench_kernels"),
     ("ps", "benchmarks.bench_ps"),
+    ("chaos", "benchmarks.bench_chaos"),
     ("serve", "benchmarks.bench_serve"),
     ("slo", "benchmarks.bench_slo"),
 ]

@@ -1,5 +1,9 @@
-"""Pytree checkpointing (.npz + JSON manifest)."""
+"""Pytree checkpointing (.npz + JSON manifest, atomic publish)."""
 
-from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.checkpoint.io import (
+    load_checkpoint, load_extra_arrays, load_manifest, read_pointer,
+    save_checkpoint, write_pointer,
+)
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["load_checkpoint", "load_extra_arrays", "load_manifest",
+           "read_pointer", "save_checkpoint", "write_pointer"]

@@ -3,12 +3,27 @@
 Flat ``.npz`` of leaves + a JSON manifest of the treedef (keypaths), so a
 checkpoint round-trips exactly (shapes, dtypes, tree structure) without
 pickle.  Works with host or sharded arrays (gathers to host on save).
+
+Crash consistency: with ``atomic=True`` (default) the checkpoint is
+staged into a ``<path>.tmp-<pid>`` sibling and published with a single
+``os.replace`` — a crash mid-write leaves a ``.tmp-`` orphan, never a
+half-written checkpoint a reader could mistake for a complete one.  The
+same write-temp-then-rename discipline backs :func:`write_pointer`, the
+``LATEST``-style pointer file a checkpoint *directory* uses to name its
+newest complete step (readers resolve the pointer, so an interrupted
+save can never be selected).
+
+``extra_arrays`` rides arbitrary named numpy arrays (e.g. the PS fleet's
+per-bucket slabs + optimizer state from :mod:`repro.ps.snapshot`)
+alongside the template-checked params/opt pytrees — they round-trip via
+:func:`load_extra_arrays` without needing a template.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import shutil
 from typing import Any
 
 import jax
@@ -23,28 +38,55 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return flat
 
 
+#: extra_arrays keys get this prefix inside arrays.npz so they can never
+#: collide with a params/opt keypath
+_EXTRA = "extra//"
+
+
 def save_checkpoint(path: str, *, params, opt_state=None, step: int = 0,
-                    metadata: dict | None = None) -> None:
-    os.makedirs(path, exist_ok=True)
+                    metadata: dict | None = None,
+                    extra_arrays: dict[str, np.ndarray] | None = None,
+                    atomic: bool = True) -> int:
+    """Write one checkpoint directory; returns the payload bytes written.
+
+    With ``atomic`` the directory appears at ``path`` fully-written or
+    not at all (staged under ``<path>.tmp-<pid>`` then ``os.replace``\\ d
+    into place, clobbering any previous checkpoint at ``path``).
+    """
     payload = {"params": params}
     if opt_state is not None:
         payload["opt"] = opt_state
     flat = _flatten(payload)
-    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    for k, v in (extra_arrays or {}).items():
+        flat[_EXTRA + k] = np.asarray(v)
+    stage = f"{path}.tmp-{os.getpid()}" if atomic else path
+    if atomic and os.path.exists(stage):
+        shutil.rmtree(stage)
+    os.makedirs(stage, exist_ok=True)
+    np.savez(os.path.join(stage, "arrays.npz"), **flat)
     manifest = {
         "step": step,
         "keys": sorted(flat.keys()),
         "metadata": metadata or {},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    with open(os.path.join(stage, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=2)
+    if atomic:
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.replace(stage, path)
+    return sum(v.nbytes for v in flat.values())
+
+
+def load_manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
 
 
 def load_checkpoint(path: str, *, params_template, opt_template=None
                     ) -> tuple[Any, Any, int]:
     """Restore into the structure of the given templates (shape-checked)."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = load_manifest(path)
     data = np.load(os.path.join(path, "arrays.npz"))
     payload = {"params": params_template}
     if opt_template is not None:
@@ -62,3 +104,35 @@ def load_checkpoint(path: str, *, params_template, opt_template=None
     restored = jax.tree_util.tree_unflatten(leaves_with_path[1], out_leaves)
     opt = restored.get("opt") if opt_template is not None else None
     return restored["params"], opt, manifest["step"]
+
+
+def load_extra_arrays(path: str) -> dict[str, np.ndarray]:
+    """The ``extra_arrays`` companion payload, prefix stripped."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    return {k[len(_EXTRA):]: data[k] for k in data.files
+            if k.startswith(_EXTRA)}
+
+
+def write_pointer(root: str, target: str, *, name: str = "LATEST") -> None:
+    """Atomically point ``root/name`` at a checkpoint directory name
+    (relative to ``root``).  Readers that resolve through the pointer
+    can never observe a partially-written step."""
+    os.makedirs(root, exist_ok=True)
+    tmp = os.path.join(root, f".{name}.tmp-{os.getpid()}")
+    with open(tmp, "w") as f:
+        f.write(target + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(root, name))
+
+
+def read_pointer(root: str, *, name: str = "LATEST") -> str | None:
+    """Resolve ``root/name`` to an absolute checkpoint path (None if the
+    pointer or its target does not exist yet)."""
+    ptr = os.path.join(root, name)
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        target = f.read().strip()
+    path = os.path.join(root, target)
+    return path if target and os.path.isdir(path) else None

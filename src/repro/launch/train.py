@@ -92,7 +92,10 @@ def train_sparse_ps(*, steps: int, batch: int | None = None,
                     transport: str | None = None,
                     optimizer: str = "none",
                     events: list[tuple[int, str, int | None]] | None = None,
-                    staleness_bound: int = 8) -> dict:
+                    staleness_bound: int = 8,
+                    ckpt_dir: str | None = None, ckpt_every: int = 0,
+                    fault_schedule: str | None = None,
+                    fault_seed: int = 0) -> dict:
     """The ``--sparse-ps`` path: reduced CTR model over the sharded PS
     (``repro.ps``) — async double-buffered pull/push unless ``sync``.
     ``batch``/``lr`` default to the CTR workload's own values.
@@ -103,6 +106,13 @@ def train_sparse_ps(*, steps: int, batch: int | None = None,
     (``sgd``/``adagrad``/``adam``) trains over the **elastic fleet** with
     the optimizer hosted on the PS shards, and ``events`` scripts fleet
     changes mid-run (see :func:`repro.ps.workload.train_ctr_elastic`).
+
+    ``ckpt_dir`` + ``ckpt_every`` arm crash-consistent unified
+    checkpoints (fleet slabs + optimizer state + tower + data cursor);
+    after a correlated primary+backup loss the run restores the newest
+    checkpoint and replays to a bit-exact trajectory.  ``fault_schedule``
+    (``repro.ps.faults.parse_schedule`` syntax) injects deterministic
+    chaos.  Both force the elastic fleet and sync mode.
     """
     import dataclasses
 
@@ -112,12 +122,16 @@ def train_sparse_ps(*, steps: int, batch: int | None = None,
     overrides = {k: v for k, v in (("batch", batch), ("lr", lr))
                  if v is not None}
     cfg = dataclasses.replace(cfg, **overrides)
-    if optimizer != "none" or events:
+    chaos = bool((ckpt_dir and ckpt_every) or fault_schedule)
+    if optimizer != "none" or events or chaos:
         return train_ctr_elastic(
             cfg, steps=steps, num_shards=num_shards,
             optimizer=optimizer if optimizer != "none" else "sgd",
-            transport=transport, mode="sync" if sync else "async",
+            transport=transport,
+            mode="sync" if sync or chaos else "async",
             events=events, staleness_bound=staleness_bound,
+            fault_schedule=fault_schedule, fault_seed=fault_seed,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
             log_every=log_every)
     return train_ctr_ps(cfg, steps=steps, num_shards=num_shards,
                         mode="sync" if sync else "async",
@@ -176,6 +190,20 @@ def main() -> None:
     ap.add_argument("--ps-staleness-bound", type=int, default=8,
                     help="max updates a pull may miss during live "
                          "migration (0 = full dual-write)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="unified fleet checkpoints (PS slabs + optimizer "
+                         "state + tower + data cursor) under this "
+                         "directory; restores after correlated "
+                         "primary+backup loss replay bit-exactly")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint cadence in steps (0 = off)")
+    ap.add_argument("--ps-fault", default=None,
+                    metavar="RULE[;RULE...]",
+                    help="deterministic fault schedule, e.g. "
+                         "'drop_reply,op=grad,after=100,times=2;"
+                         "crash,shard=0,after=400,times=1' "
+                         "(see repro.ps.faults.parse_schedule)")
+    ap.add_argument("--ps-fault-seed", type=int, default=0)
     ap.add_argument("--obs-dir", default=None,
                     help="enable observability and write trace.json + "
                          "metrics.jsonl to this directory (multiproc PS "
@@ -192,10 +220,13 @@ def main() -> None:
             partition=args.ps_partition, transport=args.ps_transport,
             optimizer=args.ps_optimizer,
             events=_parse_ps_events(args.ps_event),
-            staleness_bound=args.ps_staleness_bound)
+            staleness_bound=args.ps_staleness_bound,
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            fault_schedule=args.ps_fault, fault_seed=args.ps_fault_seed)
         summary.pop("step_times", None)
         summary.pop("step_ts", None)
         summary.pop("losses", None)
+        summary.pop("injections", None)
     else:
         summary = train(args.arch, reduced=args.reduced, steps=args.steps,
                         batch=args.batch if args.batch is not None else 8,

@@ -65,13 +65,48 @@ def _serve_signals(registry=None) -> dict:
     return sig
 
 
+def fleet_health(fleet) -> dict:
+    """Degradation signals of an :class:`~repro.ps.elastic.ElasticPSFleet`
+    — the failure-domain inputs a reactive re-planner needs alongside
+    bandwidths: live vs referenced shards, buckets currently missing a
+    replica, in-flight migrations, and the transport's retry/hedge/
+    heartbeat counters (escalations = shards declared dead)."""
+    import numpy as np
+
+    with fleet._mu:
+        live = set(fleet.transport.live_shards)
+        referenced = {int(s) for s in set(fleet.primary) | set(fleet.backup)
+                      if s >= 0}
+        unreplicated = (int(np.count_nonzero(fleet.backup < 0))
+                        if fleet.replicas else 0)
+        health = {
+            "live_shards": sorted(live),
+            "dead_shards": sorted(referenced - live),
+            "buckets_unreplicated": unreplicated,
+            "migrating": len(fleet._migrations),
+            "transport": dict(fleet.transport.counters),
+            "events": {
+                k: sum(1 for e in fleet.events if e["kind"] == k)
+                for k in ("kill", "recover", "detected", "restore")},
+        }
+    inner = getattr(fleet.transport, "inner", None)
+    if inner is not None:            # FaultInjector: fold backend counters
+        for k, v in inner.counters.items():
+            health["transport"][k] = health["transport"].get(k, 0) + v
+    health["degraded"] = bool(health["dead_shards"]
+                              or health["buckets_unreplicated"])
+    return health
+
+
 def snapshot_resources(base: ResourceType, *, telemetry=None,
                        num_examples: int | None = None,
-                       registry=None) -> dict:
+                       registry=None, fleet=None) -> dict:
     """Turn live metrics into the shapes ``core/profiles.py`` consumes.
 
     Returns ``{"resource": ResourceType, "embedding_odt": (sync, act),
-    "serve": {...}, "ps": {...}}``.  ``telemetry`` (a ``PSTelemetry``)
+    "serve": {...}, "ps": {...}}`` — plus ``"ps_health"`` when ``fleet``
+    (an ``ElasticPSFleet``) is given, so a re-planner sees degraded
+    shards, not just bandwidths.  ``telemetry`` (a ``PSTelemetry``)
     takes precedence for the PS side; otherwise the traffic is read from
     the metric registries.  Bandwidth terms with no traffic keep the
     ``base`` constants — a cold snapshot degrades to the analytic model.
@@ -102,8 +137,11 @@ def snapshot_resources(base: ResourceType, *, telemetry=None,
             odt = (per_ex * B_O, act_per_ex * B_O)
         else:
             odt = (0.0, 0.0)
-    return {"resource": res, "embedding_odt": odt,
-            "serve": _serve_signals(registry), "ps": ps}
+    out = {"resource": res, "embedding_odt": odt,
+           "serve": _serve_signals(registry), "ps": ps}
+    if fleet is not None:
+        out["ps_health"] = fleet_health(fleet)
+    return out
 
 
 def apply_measured_odt(profile: LayerProfile, sync: float,

@@ -31,15 +31,26 @@ _EXPORTS = {
     "make_step_fn": "repro.ps.workload",
     "make_table": "repro.ps.workload",
     "train_ctr_ps": "repro.ps.workload",
+    "train_ctr_elastic": "repro.ps.workload",
     "Transport": "repro.ps.transport",
     "InProcTransport": "repro.ps.transport",
     "MultiprocTransport": "repro.ps.transport",
     "make_transport": "repro.ps.transport",
     "PSShardError": "repro.ps.transport",
     "PSShardLost": "repro.ps.transport",
+    "PSShardSlow": "repro.ps.transport",
+    "RetryPolicy": "repro.ps.transport",
     "ShardServer": "repro.ps.server",
     "ElasticPSFleet": "repro.ps.elastic",
     "BucketSpec": "repro.ps.elastic",
+    "PSUnrecoverable": "repro.ps.elastic",
+    "FaultInjector": "repro.ps.faults",
+    "FaultRule": "repro.ps.faults",
+    "parse_schedule": "repro.ps.faults",
+    "FleetCheckpointer": "repro.ps.snapshot",
+    "snapshot_fleet": "repro.ps.snapshot",
+    "load_fleet_checkpoint": "repro.ps.snapshot",
+    "save_fleet_checkpoint": "repro.ps.snapshot",
 }
 
 __all__ = sorted(_EXPORTS)

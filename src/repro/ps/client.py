@@ -152,17 +152,31 @@ class PSClient:
             self._pushes_enqueued += 1
 
     def flush(self, timeout: float = 60.0) -> None:
-        """Block until every queued push has been applied to the table."""
+        """Block until every queued push has been applied to the table.
+
+        A pusher thread that already died (push raised, or it consumed
+        the stop sentinel with work still queued) can never drain the
+        queue — detected immediately and raised with the pending-push
+        count, instead of spinning out the full ``timeout``.
+        """
         deadline = time.monotonic() + timeout
         while True:
             self._raise_pusher_error()
             with self._lock:
-                if self.steps_pushed >= self._pushes_enqueued:
+                pending = self._pushes_enqueued - self.steps_pushed
+                if pending <= 0:
                     return
             if not self._pusher.is_alive():
-                raise RuntimeError("pusher thread exited with pushes pending")
+                # re-raise any error that landed between the check above
+                # and the thread's exit, then fail fast — nothing will
+                # ever apply these pushes
+                self._raise_pusher_error()
+                raise RuntimeError(
+                    f"pusher thread exited with {pending} push(es) pending")
             if time.monotonic() > deadline:
-                raise TimeoutError("PS push queue did not drain")
+                raise TimeoutError(
+                    f"PS push queue did not drain: {pending} push(es) "
+                    f"pending after {timeout}s")
             time.sleep(0.001)
 
     def _raise_pusher_error(self):

@@ -63,6 +63,15 @@ from repro.ps.server import OPTIMIZERS
 from repro.ps.transport import PSShardLost, Transport, make_transport
 
 
+class PSUnrecoverable(RuntimeError):
+    """Replica promotion cannot save this fleet: some bucket lost its
+    primary *and* every replica (correlated failure — e.g. a preempted
+    zone taking both copies).  The only way back is a durable
+    checkpoint: :meth:`ElasticPSFleet.restore_snapshot` +
+    :mod:`repro.ps.snapshot`'s :class:`~repro.ps.snapshot.
+    FleetCheckpointer`."""
+
+
 class BucketSpec:
     """Contiguous vocab slabs — the unit of placement, migration and
     replication.  More buckets than shards (default 4×) keeps rebalance
@@ -144,6 +153,10 @@ class ElasticPSFleet:
         self.telemetry = telemetry
         self.rpc_latency_s = float(rpc_latency_s)
         self.transport = make_transport(transport)
+        # proactive failure detection: the multiproc heartbeat reports a
+        # dead worker here within its deadline, instead of waiting for
+        # the next pull/push to trip over it
+        self.transport.on_shard_lost = self._on_lost
         self._mu = threading.RLock()
         self._next_sid = 0
         self.events: list[dict] = []
@@ -432,6 +445,19 @@ class ElasticPSFleet:
         self.transport.kill_shard(shard_id)
         self._event("kill", shard=shard_id)
 
+    def _on_lost(self, shard_id: int) -> None:
+        """Heartbeat callback (failure-detector thread): recover
+        proactively so the next pull/push already sees a healthy map.
+        An unrecoverable fleet is left for the training thread to trip
+        over — raising out of the detector would only kill it."""
+        self._event("detected", shard=int(shard_id))
+        try:
+            self.recover({int(shard_id)})
+        except PSUnrecoverable:
+            pass
+        except PSShardLost:
+            pass  # another shard died mid-recovery — next touch retries
+
     def recover(self, lost: set[int] | None = None) -> list[int]:
         """Re-home every bucket whose primary/backup died: promote the
         backup (bit-exact last-acked state), then re-replicate.  Returns
@@ -459,7 +485,7 @@ class ElasticPSFleet:
                     # primary and the stale src is rebuilt as its replica
                     k = int(self.backup[b])
                     if k < 0 or k in dead:
-                        raise RuntimeError(
+                        raise PSUnrecoverable(
                             f"bucket {b} lost migration dst {dst} with "
                             f"{mig['buffer_only']} unreplicated pushes and "
                             f"no live backup — unrecoverable")
@@ -469,12 +495,12 @@ class ElasticPSFleet:
             for b in range(self.spec.num_buckets):
                 p, k = int(self.primary[b]), int(self.backup[b])
                 if p in dead and k in dead:
-                    raise RuntimeError(
+                    raise PSUnrecoverable(
                         f"bucket {b} lost both primary {p} and backup {k} "
                         f"— unrecoverable (replicas={self.replicas})")
                 if p in dead:
                     if k < 0:
-                        raise RuntimeError(
+                        raise PSUnrecoverable(
                             f"bucket {b} lost primary {p} with no backup "
                             f"— unrecoverable (replicas={self.replicas})")
                     self.primary[b], k = k, p  # promote
@@ -490,6 +516,60 @@ class ElasticPSFleet:
         self._event("recover", shards=recovered,
                     seconds=time.perf_counter() - t0)
         return recovered
+
+    def restore_snapshot(self, snap: dict) -> None:
+        """Reload the whole fleet from a :func:`repro.ps.snapshot.
+        snapshot_fleet` capture — the recovery path when replica
+        promotion is out of moves (:class:`PSUnrecoverable`).
+
+        Every surviving shard is wiped of its (stale) buckets, fresh
+        shards are spawned until enough exist to host primaries (+ a
+        backup when ``replicas=1``), ownership is reassigned round-robin
+        over the live set, and each bucket's slab + optimizer state +
+        acked counter is installed bit-exactly as captured.  In-flight
+        migrations are discarded (their state predates the snapshot's
+        watermark).
+        """
+        meta = snap.get("meta", {})
+        for k, want in (("vocab", self.spec.vocab), ("dim", self.spec.dim),
+                        ("num_buckets", self.spec.num_buckets),
+                        ("optimizer", self.optimizer)):
+            if k in meta and meta[k] != want:
+                raise ValueError(
+                    f"snapshot {k}={meta[k]!r} != fleet {k}={want!r}")
+        nb = self.spec.num_buckets
+        buckets = {int(b): st for b, st in snap["buckets"].items()}
+        missing = [b for b in range(nb) if b not in buckets]
+        if missing:
+            raise ValueError(f"snapshot missing buckets {missing}")
+        t0 = time.perf_counter()
+        with self._mu:
+            self._migrations.clear()
+            need = 2 if self.replicas else 1
+            while len(self.transport.live_shards) < need:
+                self._spawn()
+            live = sorted(self.transport.live_shards)
+            # survivors may host buckets whose state post- or pre-dates
+            # the snapshot in unknown ways — wipe before reinstall
+            self.transport.request_many(
+                [(s, {"op": "drop", "bucket": b})
+                 for s in live for b in range(nb)])
+            msgs = []
+            for b in range(nb):
+                p = live[b % len(live)]
+                k = (live[(b + 1) % len(live)]
+                     if self.replicas and len(live) > 1 else -1)
+                self.primary[b], self.backup[b] = p, k
+                st = buckets[b]
+                body = {"op": "install", "bucket": b, "rows": st["rows"],
+                        "opt": st["opt"], "acked": int(st["acked"])}
+                msgs.append((p, body))
+                if k >= 0:
+                    msgs.append((k, body))
+            self.transport.request_many(msgs)
+        self._event("restore", shards=live, buckets=nb,
+                    step=meta.get("step"),
+                    seconds=time.perf_counter() - t0)
 
     # --- live migration --------------------------------------------------
     def migrate(self, bucket: int, dst: int) -> None:

@@ -45,16 +45,29 @@ the worker's pid — into the main process trace
 Every reply carries ``shard``; failures come back as ``{"err": ...}``
 instead of killing the event loop (a bad request must not look like a
 crashed shard to the failure detector).
+
+At-most-once execution: requests may carry a transport-assigned ``seq``.
+The server echoes it into the reply and keeps a bounded seq→reply cache
+(:data:`REPLY_CACHE_SIZE` entries), so a *retried* request — the
+transport resends after a timeout or an injected fault — is answered
+from the cache without re-applying.  That is what makes retrying a
+non-idempotent ``grad`` push safe: the update lands exactly once no
+matter how many times the message arrives.
 """
 
 from __future__ import annotations
 
 import os
 import traceback
+from collections import OrderedDict
 
 import numpy as np
 
 from repro.obs import trace as obs_trace
+
+#: retained seq→reply entries per shard — a few times the deepest
+#: request pipeline any one client keeps in flight, tiny vs slab memory
+REPLY_CACHE_SIZE = 16
 
 #: optimizer names accepted by :class:`ShardServer` (``"none"`` applies
 #: pre-scaled updates verbatim — the client-side-SGD mode ShardedTable
@@ -133,9 +146,12 @@ class ShardServer:
         #: bucket id → {"rows": (n, D) f32, "opt": {...}, "acked": int}
         self.buckets: dict[int, dict] = {}
         self.counters = {"pulls": 0, "pushes": 0, "replica_pushes": 0,
-                         "pull_rows": 0, "push_rows": 0}
+                         "pull_rows": 0, "push_rows": 0,
+                         "dedup_replays": 0}
         #: per-server trace ring — drained over the wire by the "obs" op
         self.trace = obs_trace.TraceBuffer(capacity=16384)
+        #: seq → reply, bounded LRU — at-most-once retry semantics
+        self._replies: OrderedDict[int, dict] = OrderedDict()
 
     # --- per-op handlers -------------------------------------------------
     def _bucket(self, b: int) -> dict:
@@ -224,12 +240,29 @@ class ShardServer:
 
     def safe_handle(self, msg: dict) -> dict:
         """:meth:`handle` with failures encoded in the reply — a bad
-        request must not be indistinguishable from a dead shard."""
+        request must not be indistinguishable from a dead shard.
+
+        If ``msg`` carries a ``seq`` already answered, the cached reply
+        is replayed **without re-executing** the op (at-most-once
+        semantics for transport retries); fresh replies echo the seq and
+        enter the bounded cache — error replies too, so a retried bad
+        request fails identically instead of re-raising server-side.
+        """
+        seq = msg.get("seq")
+        if seq is not None and seq in self._replies:
+            self.counters["dedup_replays"] += 1
+            return self._replies[seq]
         try:
-            return self.handle(msg)
+            reply = self.handle(msg)
         except Exception:
-            return {"shard": self.shard_id, "ok": False,
-                    "err": traceback.format_exc(limit=8)}
+            reply = {"shard": self.shard_id, "ok": False,
+                     "err": traceback.format_exc(limit=8)}
+        if seq is not None:
+            reply["seq"] = seq
+            self._replies[seq] = reply
+            while len(self._replies) > REPLY_CACHE_SIZE:
+                self._replies.popitem(last=False)
+        return reply
 
 
 def shard_main(conn, shard_id: int, dim: int, optimizer: str = "none",

@@ -23,10 +23,13 @@ import numpy as np
 
 from repro.data import AccessMonitor, PrefetchLoader
 from repro.ps.client import PSClient
-from repro.ps.elastic import ElasticPSFleet
+from repro.ps.elastic import ElasticPSFleet, PSUnrecoverable
+from repro.ps.faults import FaultInjector
 from repro.ps.placement import TierPlacer
 from repro.ps.sharding import ShardedTable
+from repro.ps.snapshot import FleetCheckpointer, load_fleet_checkpoint
 from repro.ps.telemetry import PSTelemetry
+from repro.ps.transport import make_transport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,6 +226,9 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
                       events: list[tuple[int, str, int | None]] | None = None,
                       staleness_bound: int = 8, depth: int = 2,
                       rpc_latency_s: float = 0.0,
+                      fault_schedule=None, fault_seed: int = 0,
+                      ckpt_dir: str | None = None, ckpt_every: int = 0,
+                      ckpt_keep: int = 2, max_restores: int = 4,
                       log_every: int = 0) -> dict:
     """Train the reduced CTR model over an **elastic** PS fleet, with
     scripted fleet events injected mid-training.
@@ -238,10 +244,27 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
     run's loss trajectory **bit-equal** (``mode="sync"``) to the same run
     without any events — the acceptance pin for lossless recovery.
     Returns the per-step ``losses`` so callers can compare trajectories.
+
+    Chaos knobs: ``fault_schedule`` (anything
+    :func:`repro.ps.faults.parse_schedule` accepts) wraps the transport
+    in a seeded :class:`~repro.ps.faults.FaultInjector`.  ``ckpt_dir`` +
+    ``ckpt_every`` arm periodic unified checkpoints
+    (:class:`~repro.ps.snapshot.FleetCheckpointer`); on a correlated
+    primary+backup loss (:class:`PSUnrecoverable`) the loop restores the
+    newest checkpoint, rewinds the (deterministic) batch stream to its
+    cursor and **replays** — the loss trajectory from the restore step
+    is bit-equal to a fault-free run (sync mode; pinned in
+    tests/test_chaos.py).
     """
     if mode not in ("sync", "async"):
         raise ValueError(f"mode must be sync|async, got {mode!r}")
+    if ckpt_dir and ckpt_every and mode != "sync":
+        raise ValueError("checkpoint/restore replay requires mode='sync' "
+                         "(async pipelines have no exact cursor)")
     cfg = cfg or CTRConfig()
+    if fault_schedule is not None:
+        transport = FaultInjector(make_transport(transport), fault_schedule,
+                                  seed=fault_seed)
     fleet = make_fleet(cfg, num_shards, optimizer=optimizer,
                        transport=transport, staleness_bound=staleness_bound,
                        rpc_latency_s=rpc_latency_s)
@@ -271,19 +294,58 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
     ts: list[float] = []
     t_start = time.perf_counter()
 
+    restores = 0
+    ckpt: FleetCheckpointer | None = None
     if mode == "sync":
+        if ckpt_dir and ckpt_every:
+            ckpt = FleetCheckpointer(fleet, ckpt_dir, every=ckpt_every,
+                                     keep=ckpt_keep)
         stream = click_stream(cfg)
-        for i in range(steps):
-            b = next(stream)
-            rows = fleet.pull(b["ids"])
-            tower, g_emb, loss = step_fn(tower, rows,
-                                         jnp.asarray(b["label"]))
-            fleet.push(b["ids"], jax.block_until_ready(g_emb), lr=emb_lr)
-            fire(i)
-            losses.append(float(loss))
-            ts.append(time.perf_counter() - t_start)
-            if log_every and i % log_every == 0:
-                print(f"step {i:4d} logloss {losses[-1]:.4f}", flush=True)
+        i = 0
+        while i < steps:
+            try:
+                b = next(stream)
+                rows = fleet.pull(b["ids"])
+                tower, g_emb, loss = step_fn(tower, rows,
+                                             jnp.asarray(b["label"]))
+                fleet.push(b["ids"], jax.block_until_ready(g_emb),
+                           lr=emb_lr)
+                fire(i)
+                losses.append(float(loss))
+                ts.append(time.perf_counter() - t_start)
+                if ckpt is not None:
+                    # post-step state: fleet slabs + tower + cursor i+1
+                    ckpt.maybe_save(i, tower, metadata={"cursor": i + 1,
+                                                        "seed": cfg.seed})
+                if log_every and i % log_every == 0:
+                    print(f"step {i:4d} logloss {losses[-1]:.4f}",
+                          flush=True)
+                i += 1
+            except PSUnrecoverable:
+                # correlated primary+backup loss — replica promotion is
+                # out of moves; restore the newest unified checkpoint
+                # and replay the deterministic stream from its cursor
+                if ckpt is None or restores >= max_restores:
+                    raise
+                restores += 1
+                ckpt.wait()
+                try:
+                    tower, snap, step0, _ = load_fleet_checkpoint(
+                        ckpt_dir, params_template=tower)
+                except FileNotFoundError:
+                    raise  # nothing durable yet — genuinely lost
+                fleet.restore_snapshot(snap)
+                del losses[step0 + 1:]
+                del ts[step0 + 1:]
+                stream = click_stream(cfg)
+                for _ in range(step0 + 1):   # skip replayed batches
+                    next(stream)
+                i = step0 + 1
+                if log_every:
+                    print(f"restored checkpoint step {step0}, replaying "
+                          f"from step {i}", flush=True)
+        if ckpt is not None:
+            ckpt.wait()
     else:
         loader = PrefetchLoader(
             itertools.islice(click_stream(cfg), steps), depth=depth)
@@ -305,6 +367,13 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
     tel = fleet.telemetry.totals()
     fleet_events = list(fleet.events)
     stats = fleet.stats()
+    tr = fleet.transport
+    transport_counters = dict(tr.counters)
+    injections: list[dict] = []
+    if isinstance(tr, FaultInjector):
+        injections = list(tr.injections)
+        for k, v in tr.inner.counters.items():
+            transport_counters[k] = transport_counters.get(k, 0) + v
     fleet.close()
     recoveries = [e for e in fleet_events if e["kind"] == "recover"]
     joins = [e for e in fleet_events if e["kind"] == "join"]
@@ -320,6 +389,10 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
         "events": fleet_events,
         "recovery_seconds": sum(e["seconds"] for e in recoveries),
         "join_seconds": sum(e["seconds"] for e in joins),
+        "restores": restores,
+        "checkpoints": list(ckpt.saved) if ckpt is not None else [],
+        "injections": injections,
+        "transport_counters": transport_counters,
         "pull_gb": tel["pull"]["bytes"] / 1e9,
         "push_gb": tel["push"]["bytes"] / 1e9,
     }
