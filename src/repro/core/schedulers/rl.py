@@ -185,13 +185,16 @@ class RLScheduler(Scheduler):
 
     # -- shared pieces --------------------------------------------------------
 
-    def _anchored_cache(self, profiles, fleet, job) -> CostCache:
+    def _anchored_cache(self, profiles, fleet, job, warm=()) -> CostCache:
         """Cache pre-seeded with the warm-start anchors (beyond-paper,
         DESIGN.md): the homogeneous plans (Algorithm 1 "may also generate
         a homogeneous scheduling plan") and the AIBox heuristic
-        (data-intensive layers → type 0).  The final plan is
-        best-of(search ∪ anchors), so RL never returns worse than the
-        static heuristics it subsumes."""
+        (data-intensive layers → type 0).  ``warm`` adds caller-supplied
+        assignment vectors — e.g. the re-planner's incumbent plan — to the
+        anchor set (malformed entries are ignored).  Anchors are
+        oracle-scored here and the final plan is best-of(search ∪
+        anchors), so RL never returns worse than the static heuristics it
+        subsumes, nor worse than any warm start it was seeded with."""
         T, L = len(fleet), len(profiles)
         cache = CostCache(profiles, fleet, job)
         anchors = [(t,) * L for t in range(T)]
@@ -199,6 +202,10 @@ class RLScheduler(Scheduler):
             anchors.append(tuple(
                 0 if p.kind in ("embedding", "nce") else 1 for p in profiles
             ))
+        for w in warm:
+            a = tuple(int(x) for x in w)
+            if len(a) == L and all(0 <= x < T for x in a):
+                anchors.append(a)
         cache.batch_call(anchors)
         return cache
 
@@ -242,7 +249,7 @@ class RLScheduler(Scheduler):
         return self._search_unfused(profiles, fleet, job)
 
     def schedule_many(
-        self, specs: Sequence[tuple]
+        self, specs: Sequence[tuple], warm_starts: Sequence | None = None
     ) -> list[ScheduleResult]:
         """Schedule several ``(profiles, fleet, job)`` workloads in one
         vmapped fused search per fleet-size group.
@@ -253,17 +260,36 @@ class RLScheduler(Scheduler):
         mask, and the entire chunked search runs as one program per group.
         Per-model results are identical in structure to ``schedule()``'s.
         With ``fused=False`` this degrades to a sequential loop.
+
+        ``warm_starts[i]``, when given, is a sequence of assignment
+        vectors seeded as oracle-scored anchors for ``specs[i]`` — the
+        reactive re-planner passes its incumbent plan here, so the search
+        result is structurally never worse than the plan it might replace.
         """
 
+        warms = ([() for _ in specs] if warm_starts is None
+                 else [tuple(w) if w else () for w in warm_starts])
+        assert len(warms) == len(specs)
         results: dict[int, ScheduleResult] = {}
         if not self.fused:
-            return [self.schedule(p, f, j) for p, f, j in specs]
+            for i, (p, f, j) in enumerate(specs):
+                t0 = time.perf_counter()
+                plan, evals, extra = self._search_unfused(
+                    p, f, j, warm=warms[i])
+                wall = time.perf_counter() - t0
+                cost, prov = plan_cost(plan, p, f, j)
+                results[i] = ScheduleResult(
+                    plan=plan, prov=prov, cost=cost, wall_time_s=wall,
+                    evaluations=evals, extra=extra,
+                )
+            return [results[i] for i in range(len(specs))]
         groups: dict[int, list[int]] = {}
         for i, (_, fleet, _) in enumerate(specs):
             groups.setdefault(len(fleet), []).append(i)
         for idxs in groups.values():
             t0 = time.perf_counter()
-            outs = self._fused_search([specs[i] for i in idxs])
+            outs = self._fused_search([specs[i] for i in idxs],
+                                      warm_starts=[warms[i] for i in idxs])
             wall = time.perf_counter() - t0
             for i, (plan, evals, extra) in zip(idxs, outs):
                 profiles, fleet, job = specs[i]
@@ -276,7 +302,7 @@ class RLScheduler(Scheduler):
 
     # -- fused implementation -------------------------------------------------
 
-    def _fused_search(self, specs):
+    def _fused_search(self, specs, warm_starts=None):
         """Chunked-scan REINFORCE for one or more same-fleet-size models.
 
         Returns ``[(plan, evaluations, extra), ...]`` aligned with
@@ -288,7 +314,9 @@ class RLScheduler(Scheduler):
         assert all(len(f) == T for _, f, _ in specs), "group by fleet size"
         Lmax = max(len(p) for p, _, _ in specs)
         num_layers = [len(p) for p, _, _ in specs]
-        caches = [self._anchored_cache(p, f, j) for p, f, j in specs]
+        warms = warm_starts if warm_starts is not None else [()] * M
+        caches = [self._anchored_cache(p, f, j, warm=w)
+                  for (p, f, j), w in zip(specs, warms)]
 
         # policy init in float32, OUTSIDE the x64 context (matches unfused)
         key = jax.random.PRNGKey(self.seed)
@@ -422,7 +450,7 @@ class RLScheduler(Scheduler):
 
     # -- unfused (per-round NumPy-scored) implementation ----------------------
 
-    def _search_unfused(self, profiles, fleet, job):
+    def _search_unfused(self, profiles, fleet, job, warm=()):
         T = len(fleet)
         feats = jnp.asarray(pol.layer_features(profiles))
         in_dim = feats.shape[1] + T
@@ -436,7 +464,7 @@ class RLScheduler(Scheduler):
             0,
         )
 
-        cache = self._anchored_cache(profiles, fleet, job)
+        cache = self._anchored_cache(profiles, fleet, job, warm=warm)
         b = 0.0  # moving-average baseline (Algorithm 1, Line 1)
         b_init = False
         best_cost, best_since = float("inf"), 0

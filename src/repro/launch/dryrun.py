@@ -47,12 +47,12 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     with mesh:
         jitted = jax.jit(step, in_shardings=named(mesh, specs),
                          donate_argnums=donate if donate else ())
-        t0 = time.time()
+        t0 = time.perf_counter()
         lowered = jitted.lower(*args)
-        rec["lower_s"] = round(time.time() - t0, 2)
-        t0 = time.time()
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t0, 2)
+        rec["compile_s"] = round(time.perf_counter() - t0, 2)
 
         ma = compiled.memory_analysis()
         rec["memory"] = {

@@ -73,12 +73,12 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     )
     # prefill: ONE forward fills the cache (vs stepping the prompt
     # token-by-token through the decode path)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with obs_trace.span("serve.prefill", "serve", batch=batch,
                         prompt_len=prompt_len):
         logits, cache = prefill_jit(params, prompts, cache)
         jax.block_until_ready(logits)
-    prefill_s = time.time() - t0
+    prefill_s = time.perf_counter() - t0
 
     sampling = temperature > 0.0
     if sampling:
@@ -107,12 +107,12 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
         chunk_key = lambda n: jnp.zeros((2,), jnp.uint32)  # noqa: E731
     # warm the scan program (functional: the discarded chunk leaves tok /
     # cache untouched) so decode_s measures steady-state throughput
-    t0 = time.time()
+    t0 = time.perf_counter()
     jax.block_until_ready(
         loop_jit(params, tok, cache, jnp.int32(prompt_len), chunk_key(0))[0])
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
     outs = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     done, idx, n_chunk = 0, prompt_len, 0
     while done < gen:
         with obs_trace.span("serve.decode_chunk", "serve", chunk=chunk,
@@ -123,7 +123,7 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
         done += chunk
         idx += chunk
         n_chunk += 1
-    decode_s = time.time() - t0
+    decode_s = time.perf_counter() - t0
     obs.REGISTRY.counter("serve.tokens").inc(batch * gen)
     out = np.concatenate(outs, axis=1)[:, :gen]
 
@@ -241,7 +241,7 @@ def serve_continuous(arch: str, *, reduced: bool = True,
             if slot_req[s] is not None or not queue:
                 continue
             rid, (plen, g) = queue[0]
-            if arrival_s is not None and time.time() - t0 < arrival_s[rid]:
+            if arrival_s is not None and time.perf_counter() - t0 < arrival_s[rid]:
                 break                       # FIFO: head hasn't arrived yet
             need = plen + g + decode_chunk
             if not pool.can_admit(need):
@@ -271,7 +271,7 @@ def serve_continuous(arch: str, *, reduced: bool = True,
             cache = dec.merge_slot_cache(cache, sub, s)
             # the np.asarray above synced the prefill: the first output
             # token exists NOW — that's the TTFT edge
-            done_t = time.time()
+            done_t = time.perf_counter()
             first_tok_t[rid] = done_t
             arrive = t0 + (arrival_s[rid] if arrival_s is not None else 0.0)
             ttft_s[rid] = done_t - arrive
@@ -282,13 +282,13 @@ def serve_continuous(arch: str, *, reduced: bool = True,
             slot_req[s] = [rid, g]
         _gauges()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     admit()
     while any(active) or queue:
         if not any(active):
             # open-loop idle gap: sleep until the head request arrives
             rid_next = queue[0][0]
-            wait = t0 + arrival_s[rid_next] - time.time()
+            wait = t0 + arrival_s[rid_next] - time.perf_counter()
             if wait > 0:
                 time.sleep(wait)
             admit()
@@ -303,7 +303,7 @@ def serve_continuous(arch: str, *, reduced: bool = True,
             toks, ntok, cache = loop_jit(params, jnp.asarray(cur_tok), cache)
             toks_h = np.asarray(toks)       # one transfer per chunk
         cur_tok = np.array(ntok)            # writable: admit() refills slots
-        harvest_t = time.time()
+        harvest_t = time.perf_counter()
         for s in range(slots):
             if slot_req[s] is None:
                 continue
@@ -330,7 +330,7 @@ def serve_continuous(arch: str, *, reduced: bool = True,
                 obs_trace.instant("serve.finish", "serve", rid=rid,
                                   gen=g)
         admit()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     _gauges()
 
     kv_bytes = sum(
@@ -386,9 +386,41 @@ def main() -> None:
     ap.add_argument("--obs-dir", default=None,
                     help="enable observability and write trace.json + "
                          "metrics.jsonl to this directory")
+    ap.add_argument("--replan", action="store_true",
+                    help="run the reactive re-planning controller on a "
+                         "background thread while --continuous serves: "
+                         "windows the serve SLO signals (TTFT/TPOT p99, "
+                         "queue growth), re-plans on sustained violation "
+                         "(enables the metric registry)")
+    ap.add_argument("--replan-window-s", type=float, default=1.0,
+                    help="telemetry window span in seconds")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="TTFT p99 SLO in seconds (0 = no SLO trigger)")
+    ap.add_argument("--tpot-slo", type=float, default=0.0,
+                    help="TPOT p99 SLO in seconds (0 = no SLO trigger)")
     args = ap.parse_args()
     if args.obs_dir:
         obs.configure(run_dir=args.obs_dir)
+    controller = None
+    if args.replan and args.continuous:
+        from repro.core.cost_model import TrainingJob
+        from repro.core.profiles import ctrdnn_layers
+        from repro.core.replan import ReplanConfig, ReplanController
+        from repro.core.resources import default_fleet
+        from repro.core.schedulers.rl import RLScheduler
+        from repro.obs.bridge import snapshot_resources
+
+        obs.REGISTRY.enabled = True   # the detector reads serve histograms
+        rfleet = default_fleet()
+        controller = ReplanController(
+            ctrdnn_layers(), rfleet, TrainingJob(),
+            RLScheduler(rounds=40, plans_per_round=16,
+                        early_stop_rounds=15, chunk_rounds=10),
+            snapshot_fn=lambda: snapshot_resources(rfleet[0]),
+            config=ReplanConfig(window_s=args.replan_window_s,
+                                ttft_slo_s=args.ttft_slo,
+                                tpot_slo_s=args.tpot_slo))
+        controller.start()
     if args.continuous:
         out = serve_continuous(args.arch, reduced=args.reduced,
                                slots=args.batch)
@@ -398,6 +430,9 @@ def main() -> None:
                     kv_impl=args.kv_impl, temperature=args.temperature,
                     top_k=args.top_k, top_p=args.top_p,
                     sample_seed=args.sample_seed)
+    if controller is not None:
+        controller.stop()
+        out["replan"] = controller.report()
     if args.obs_dir:
         out["obs"] = obs.flush()
     print(json.dumps(out, indent=2))

@@ -53,22 +53,22 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
 
     losses = []
     reg = obs.REGISTRY
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(steps):
-        td = time.time()
+        td = time.perf_counter()
         batch_np = next(loader)
-        reg.histogram("train.data_s").record(time.time() - td)
-        ts = time.time()
+        reg.histogram("train.data_s").record(time.perf_counter() - td)
+        ts = time.perf_counter()
         with obs_trace.span("train.step", "train", step=i):
             jbatch = {k: jnp.asarray(v) for k, v in batch_np.items()}
             params, opt_state, metrics = step_fn(params, opt_state, jbatch)
             # float() syncs the step — the histogram sees real step time
             losses.append(float(metrics["loss"]))
-        reg.histogram("train.step_s").record(time.time() - ts)
+        reg.histogram("train.step_s").record(time.perf_counter() - ts)
         if log_every and (i % log_every == 0 or i == steps - 1):
             print(f"step {i:4d} loss {losses[-1]:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+                  f"({(time.perf_counter() - t0) / (i + 1):.2f}s/step)", flush=True)
     loader.close()
     if checkpoint_dir:
         save_checkpoint(checkpoint_dir, params=params, opt_state=opt_state,
@@ -81,7 +81,7 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
         "arch": cfg.name, "params": n_params, "steps": steps,
         "first_loss": losses[0], "last_loss": losses[-1],
         "loss_decreased": float(np.mean(losses[-k:])) < float(np.mean(losses[:k])),
-        "seconds": time.time() - t0,
+        "seconds": time.perf_counter() - t0,
     }
 
 
@@ -95,7 +95,8 @@ def train_sparse_ps(*, steps: int, batch: int | None = None,
                     staleness_bound: int = 8,
                     ckpt_dir: str | None = None, ckpt_every: int = 0,
                     fault_schedule: str | None = None,
-                    fault_seed: int = 0) -> dict:
+                    fault_seed: int = 0,
+                    replan=None) -> dict:
     """The ``--sparse-ps`` path: reduced CTR model over the sharded PS
     (``repro.ps``) — async double-buffered pull/push unless ``sync``.
     ``batch``/``lr`` default to the CTR workload's own values.
@@ -113,6 +114,12 @@ def train_sparse_ps(*, steps: int, batch: int | None = None,
     checkpoint and replays to a bit-exact trajectory.  ``fault_schedule``
     (``repro.ps.faults.parse_schedule`` syntax) injects deterministic
     chaos.  Both force the elastic fleet and sync mode.
+
+    ``replan`` (a :class:`repro.core.replan.ReplanConfig`) arms the
+    reactive re-planning controller: live PS telemetry + fleet health
+    are windowed into interval rates, drift triggers a warm-started RL
+    re-plan, and the decisions land in the summary under ``"replan"``.
+    Forces the elastic fleet (the controller consumes fleet health).
     """
     import dataclasses
 
@@ -123,7 +130,12 @@ def train_sparse_ps(*, steps: int, batch: int | None = None,
                  if v is not None}
     cfg = dataclasses.replace(cfg, **overrides)
     chaos = bool((ckpt_dir and ckpt_every) or fault_schedule)
-    if optimizer != "none" or events or chaos:
+    if optimizer != "none" or events or chaos or replan is not None:
+        factory = None
+        if replan is not None:
+            from repro.core.replan import ctr_replan_factory
+
+            factory = ctr_replan_factory(replan)
         return train_ctr_elastic(
             cfg, steps=steps, num_shards=num_shards,
             optimizer=optimizer if optimizer != "none" else "sgd",
@@ -132,6 +144,7 @@ def train_sparse_ps(*, steps: int, batch: int | None = None,
             events=events, staleness_bound=staleness_bound,
             fault_schedule=fault_schedule, fault_seed=fault_seed,
             ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+            replan=factory,
             log_every=log_every)
     return train_ctr_ps(cfg, steps=steps, num_shards=num_shards,
                         mode="sync" if sync else "async",
@@ -204,6 +217,20 @@ def main() -> None:
                          "crash,shard=0,after=400,times=1' "
                          "(see repro.ps.faults.parse_schedule)")
     ap.add_argument("--ps-fault-seed", type=int, default=0)
+    ap.add_argument("--replan", action="store_true",
+                    help="arm the reactive re-planning controller: window "
+                         "PS telemetry + fleet health into interval rates, "
+                         "re-run the warm-started RL search on drift "
+                         "(forces the elastic fleet)")
+    ap.add_argument("--replan-window-steps", type=int, default=25,
+                    help="steps per telemetry window")
+    ap.add_argument("--replan-bw-tol", type=float, default=0.5,
+                    help="relative bandwidth deviation that counts as drift")
+    ap.add_argument("--replan-margin", type=float, default=0.05,
+                    help="fractional cost improvement required to switch "
+                         "plans")
+    ap.add_argument("--replan-cooldown", type=int, default=3,
+                    help="windows to sit out after a replan consideration")
     ap.add_argument("--obs-dir", default=None,
                     help="enable observability and write trace.json + "
                          "metrics.jsonl to this directory (multiproc PS "
@@ -214,6 +241,15 @@ def main() -> None:
         # before any transport spawn, so shard workers inherit REPRO_OBS
         obs.configure(run_dir=args.obs_dir)
     if args.sparse_ps:
+        replan_cfg = None
+        if args.replan:
+            from repro.core.replan import ReplanConfig
+
+            replan_cfg = ReplanConfig(
+                window_steps=args.replan_window_steps,
+                bw_tolerance=args.replan_bw_tol,
+                switch_margin=args.replan_margin,
+                cooldown_windows=args.replan_cooldown)
         summary = train_sparse_ps(
             steps=args.steps, batch=args.batch, lr=args.lr,
             num_shards=args.ps_shards, sync=args.ps_sync,
@@ -222,7 +258,8 @@ def main() -> None:
             events=_parse_ps_events(args.ps_event),
             staleness_bound=args.ps_staleness_bound,
             ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-            fault_schedule=args.ps_fault, fault_seed=args.ps_fault_seed)
+            fault_schedule=args.ps_fault, fault_seed=args.ps_fault_seed,
+            replan=replan_cfg)
         summary.pop("step_times", None)
         summary.pop("step_ts", None)
         summary.pop("losses", None)

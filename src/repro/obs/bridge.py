@@ -31,11 +31,19 @@ def _ps_traffic(registries=None) -> dict:
     ``PSTelemetry``-named counters (``ps.bytes``/``ps.seconds`` labeled
     ``dir=pull|push``, one shard per label) — per-registry ``seconds`` is
     the max over shards (shards serve concurrently), matching
-    ``PSTelemetry.totals``; registries (independent tables) add up."""
+    ``PSTelemetry.totals``; registries (independent tables) add up.
+
+    Closed registries are skipped: every ``PSTelemetry`` owns a fresh
+    named registry that outlives its table in ``all_registries()``, so
+    without the filter a snapshot taken after e.g. ``bench_ps``'s sync
+    run would sum dead clients' cumulative traffic into the *live*
+    bandwidths the re-planner consumes."""
     out = {d: {"bytes": 0.0, "seconds": 0.0, "rows": 0.0}
            for d in ("pull", "push")}
     for reg in (registries if registries is not None
-                else obs_metrics.all_registries()):
+                else obs_metrics.live_registries()):
+        if reg.closed:
+            continue
         for d in ("pull", "push"):
             per_shard_secs = [m.value for lab, m in reg.find("ps.seconds")
                               if lab.get("dir") == d]
@@ -60,8 +68,16 @@ def _serve_signals(registry=None) -> dict:
         "tokens": reg.value("serve.tokens"),
     }
     for name, key in (("serve.ttft_s", "ttft"), ("serve.tpot_s", "tpot")):
-        for _, hist in reg.find(name):
-            sig[key] = hist.snapshot()
+        hists = [h for _, h in reg.find(name)]
+        if not hists:
+            continue
+        # find() may match several labeled histograms under one name —
+        # merge them into one pooled snapshot (bucket counts add, the
+        # GROWTH quantile bound holds against the union) instead of
+        # silently keeping whichever iterated last
+        sig[key] = (hists[0].snapshot() if len(hists) == 1
+                    else obs_metrics.merge_histograms(hists))
+        sig[key]["streams"] = len(hists)
     return sig
 
 
@@ -142,6 +158,112 @@ def snapshot_resources(base: ResourceType, *, telemetry=None,
     if fleet is not None:
         out["ps_health"] = fleet_health(fleet)
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotDelta:
+    """Interval rates between two :func:`snapshot_resources` snapshots.
+
+    The metric registries are **cumulative since process start**, so a
+    re-planner that read two snapshots and divided lifetime bytes by
+    lifetime seconds would see a *lifetime average* — a mid-run bandwidth
+    collapse gets diluted toward invisibility as the run ages.  This is
+    the windowed view: every byte/second/count field is the difference
+    ``cur − prev``, and the bandwidth properties are Δbytes/Δseconds over
+    the window only.  Gauges (queue depth, pool occupancy) are sampled at
+    the window end plus a growth term; histograms stay lifetime (their
+    buckets are not exposed in snapshots) but ride along with the count
+    of requests that *completed inside the window*, so SLO checks can be
+    gated on the window actually having seen traffic.
+    """
+
+    seconds: float               #: wall-clock span of the window
+    pull_bytes: float
+    push_bytes: float
+    pull_seconds: float          #: PS in-flight seconds within the window
+    push_seconds: float
+    tokens: float                #: serve tokens emitted in the window
+    queue_depth: float           #: depth at window end (gauge)
+    queue_growth: float          #: depth end − depth start
+    ttft: dict | None            #: lifetime TTFT snapshot at window end
+    tpot: dict | None
+    ttft_completed: float        #: requests whose TTFT landed in-window
+    tpot_completed: float
+    ps_degraded: bool            #: fleet health at window end
+    dead_shards: int
+    fleet_events: int            #: lifecycle events (join/leave/kill/
+    #: detected/recover/restore) that fired inside the window
+
+    @property
+    def ingest_bw(self) -> float:
+        """Windowed pull bandwidth (0.0 = no pull traffic this window)."""
+        return (self.pull_bytes / self.pull_seconds
+                if self.pull_seconds > 0 else 0.0)
+
+    @property
+    def net_bw(self) -> float:
+        """Windowed pull+push bandwidth (0.0 = no traffic this window)."""
+        b = self.pull_bytes + self.push_bytes
+        s = self.pull_seconds + self.push_seconds
+        return b / s if s > 0 else 0.0
+
+    @property
+    def has_ps_traffic(self) -> bool:
+        return (self.pull_seconds + self.push_seconds) > 0.0
+
+    def resource(self, base: ResourceType) -> ResourceType:
+        """``base`` re-anchored to this window's measured bandwidths
+        (terms without window traffic keep the ``base`` constants)."""
+        ingest, net = self.ingest_bw, self.net_bw
+        return dataclasses.replace(
+            base, name=base.name + "+win",
+            ingest_bw=ingest if ingest > 0 else base.ingest_bw,
+            net_bw=net if net > 0 else base.net_bw)
+
+    def embedding_odt(self, num_examples: float) -> tuple[float, float]:
+        """Windowed measured ``(odt_sync, odt_act)`` seconds per ``B_O``
+        profiling window, from this window's PS traffic over
+        ``num_examples`` training examples processed in the window."""
+        from repro.core.profiles import B_O
+
+        if num_examples <= 0 or not self.has_ps_traffic:
+            return 0.0, 0.0
+        per_ex = (self.pull_seconds + self.push_seconds) / num_examples
+        act_per_ex = self.pull_seconds / num_examples
+        return per_ex * B_O, act_per_ex * B_O
+
+
+def _hist_count(sig: dict, key: str) -> float:
+    h = sig.get(key)
+    return float(h["count"]) if h else 0.0
+
+
+def snapshot_delta(prev: dict, cur: dict, seconds: float) -> SnapshotDelta:
+    """The windowed difference of two :func:`snapshot_resources` dicts
+    (``prev`` taken ``seconds`` before ``cur``)."""
+    pp, cp = prev["ps"], cur["ps"]
+    ps_, cs = prev["serve"], cur["serve"]
+    health = cur.get("ps_health")
+    ev_prev = sum(prev["ps_health"]["events"].values()) \
+        if prev.get("ps_health") else 0
+    ev_cur = sum(health["events"].values()) if health else 0
+    return SnapshotDelta(
+        seconds=float(seconds),
+        pull_bytes=cp["pull"]["bytes"] - pp["pull"]["bytes"],
+        push_bytes=cp["push"]["bytes"] - pp["push"]["bytes"],
+        pull_seconds=cp["pull"]["seconds"] - pp["pull"]["seconds"],
+        push_seconds=cp["push"]["seconds"] - pp["push"]["seconds"],
+        tokens=cs["tokens"] - ps_["tokens"],
+        queue_depth=cs["queue_depth"],
+        queue_growth=cs["queue_depth"] - ps_["queue_depth"],
+        ttft=cs.get("ttft"),
+        tpot=cs.get("tpot"),
+        ttft_completed=_hist_count(cs, "ttft") - _hist_count(ps_, "ttft"),
+        tpot_completed=_hist_count(cs, "tpot") - _hist_count(ps_, "tpot"),
+        ps_degraded=bool(health["degraded"]) if health else False,
+        dead_shards=len(health["dead_shards"]) if health else 0,
+        fleet_events=ev_cur - ev_prev,
+    )
 
 
 def apply_measured_odt(profile: LayerProfile, sync: float,

@@ -29,6 +29,7 @@ import math
 import os
 import threading
 import weakref
+from typing import Sequence
 
 #: geometric bucket growth: quantiles are exact within this factor
 GROWTH = 2.0 ** 0.125            # ≈ 1.0905 → ≤ ~9% relative error
@@ -198,11 +199,23 @@ class Registry:
     def __init__(self, name: str = "default", *, enabled: bool = True):
         self.name = name
         self.enabled = enabled
+        #: set by :meth:`close` when the owning subsystem shuts down —
+        #: live-state aggregators (``bridge._ps_traffic``) skip closed
+        #: registries so a finished client's cumulative traffic can't
+        #: bleed into a later snapshot's bandwidths; whole-run exports
+        #: (``snapshot_all``) still include them as history
+        self.closed = False
         self._lock = threading.Lock()
         #: (kind, name, labels-tuple) → metric
         self._metrics: dict[tuple, object] = {}
         with _REG_LOCK:
             _REGISTRIES.add(self)
+
+    def close(self) -> None:
+        """Mark this registry as belonging to a shut-down owner.  Reads
+        keep working (history), but :func:`live_registries` — and with it
+        the live-metrics bridge — stops aggregating it.  Idempotent."""
+        self.closed = True
 
     # --- get-or-create ---------------------------------------------------
     def _get(self, kind: str, name: str, labels: dict):
@@ -258,6 +271,56 @@ class Registry:
 def all_registries() -> list[Registry]:
     with _REG_LOCK:
         return sorted(_REGISTRIES, key=lambda r: r.name)
+
+
+def live_registries() -> list[Registry]:
+    """Every registry whose owner has not been closed — the set
+    *current-state* aggregation (the cost-model bridge) must use, as
+    opposed to whole-run exports which want closed history too."""
+    return [r for r in all_registries() if not r.closed]
+
+
+def merge_histograms(hists: Sequence[Histogram]) -> dict:
+    """One :meth:`Histogram.snapshot`-shaped dict over the union of
+    several histograms' samples, as if every value had been recorded into
+    a single histogram (bucket counts add; the quantile walk is the same
+    as :meth:`Histogram.quantile`, so the GROWTH error bound holds
+    against the pooled sample).  The aggregation fix for ``find()``
+    matching multiple labeled histograms under one metric name."""
+    buckets: dict[int, int] = {}
+    count, total = 0, 0.0
+    mn, mx = math.inf, -math.inf
+    for h in hists:
+        with h._lock:
+            for b, n in h._buckets.items():
+                buckets[b] = buckets.get(b, 0) + n
+            count += h.count
+            total += h.total
+            mn = min(mn, h._min)
+            mx = max(mx, h._max)
+    if not count:
+        return {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0, "max": 0.0,
+                "p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+    def quantile(q: float) -> float:
+        if q <= 0.0:
+            return mn
+        if q >= 1.0:
+            return mx
+        rank = min(count - 1, max(0, math.ceil(q * count) - 1))
+        cum = 0
+        for b in sorted(buckets):
+            cum += buckets[b]
+            if cum > rank:
+                if b < 0:
+                    return mn
+                est = FLOOR * math.exp((b + 0.5) * _LOG_G)
+                return min(max(est, mn), mx)
+        return mx
+
+    return {"count": count, "sum": total, "mean": total / count,
+            "min": mn, "max": mx, "p50": quantile(0.50),
+            "p95": quantile(0.95), "p99": quantile(0.99)}
 
 
 def snapshot_all() -> dict:

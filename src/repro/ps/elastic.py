@@ -685,3 +685,5 @@ class ElasticPSFleet:
 
     def close(self) -> None:
         self.transport.close()
+        if self.telemetry is not None:
+            self.telemetry.close()

@@ -483,6 +483,8 @@ class ShardedTable:
     def close(self) -> None:
         """Shut the shard endpoints down (idempotent)."""
         self.transport.close()
+        if self.telemetry is not None:
+            self.telemetry.close()
 
 
 def _to_memory_kind(arr, kind: str):

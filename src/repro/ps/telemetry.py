@@ -129,6 +129,14 @@ class PSTelemetry:
                 self.push.append(ShardCounters(self.registry, "push", s))
                 self.num_shards += 1
 
+    def close(self) -> None:
+        """Mark the backing registry closed (idempotent).  Called by the
+        owning table/fleet on shutdown so the live-metrics bridge stops
+        folding this telemetry's cumulative traffic into fresh
+        bandwidth snapshots; reads (``totals``/``shard_report``) keep
+        working as history."""
+        self.registry.close()
+
     def record_event(self, event: dict) -> None:
         """Log one fleet lifecycle event (join/leave/kill/migrate/recover
         dicts from :class:`~repro.ps.elastic.ElasticPSFleet`)."""

@@ -229,6 +229,7 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
                       fault_schedule=None, fault_seed: int = 0,
                       ckpt_dir: str | None = None, ckpt_every: int = 0,
                       ckpt_keep: int = 2, max_restores: int = 4,
+                      replan=None,
                       log_every: int = 0) -> dict:
     """Train the reduced CTR model over an **elastic** PS fleet, with
     scripted fleet events injected mid-training.
@@ -255,6 +256,13 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
     cursor and **replays** — the loss trajectory from the restore step
     is bit-equal to a fault-free run (sync mode; pinned in
     tests/test_chaos.py).
+
+    ``replan`` is a factory ``fleet -> ReplanController`` (see
+    ``core/replan.py``): the controller is built once the fleet exists,
+    ``observe()``-d after every step (step-driven windows — the training
+    loop stays single-threaded), and its :meth:`report` lands in the
+    result under ``"replan"``.  A factory rather than a controller keeps
+    this module free of scheduler imports.
     """
     if mode not in ("sync", "async"):
         raise ValueError(f"mode must be sync|async, got {mode!r}")
@@ -285,6 +293,7 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
             else:
                 raise ValueError(f"unknown fleet event {action!r}")
 
+    controller = replan(fleet) if replan is not None else None
     step_fn = make_step_fn(cfg)
     tower = init_tower(cfg, jax.random.PRNGKey(cfg.seed + 1))
     # the fleet's PS-hosted optimizer applies the lr server-side, so the
@@ -313,6 +322,8 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
                 fire(i)
                 losses.append(float(loss))
                 ts.append(time.perf_counter() - t_start)
+                if controller is not None:
+                    controller.observe(num_examples=cfg.batch)
                 if ckpt is not None:
                     # post-step state: fleet slabs + tower + cursor i+1
                     ckpt.maybe_save(i, tower, metadata={"cursor": i + 1,
@@ -359,6 +370,8 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
                 fire(i)
                 losses.append(float(loss))
                 ts.append(time.perf_counter() - t_start)
+                if controller is not None:
+                    controller.observe(num_examples=cfg.batch)
         finally:
             client.close()
             loader.close()
@@ -377,7 +390,9 @@ def train_ctr_elastic(cfg: CTRConfig | None = None, *, steps: int = 200,
     fleet.close()
     recoveries = [e for e in fleet_events if e["kind"] == "recover"]
     joins = [e for e in fleet_events if e["kind"] == "join"]
+    replan_report = controller.report() if controller is not None else None
     return {
+        "replan": replan_report,
         "mode": mode, "steps": len(losses), "optimizer": optimizer,
         "first_loss": losses[0], "last_loss": losses[-1],
         "loss_decreased": losses[-1] < losses[0],

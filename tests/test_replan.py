@@ -1,0 +1,407 @@
+"""Reactive re-planning loop: windowed deltas, drift triggers,
+hysteresis/cooldown (no flapping), switch-cost margin, warm-start seam,
+and the measurement-bug regressions (closed-registry skip, multi-stream
+histogram merge)."""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import TrainingJob, plan_cost
+from repro.core.plan import SchedulingPlan
+from repro.core.profiles import ctrdnn_layers, profile_layers
+from repro.core.replan import (
+    DriftDetector,
+    ReplanConfig,
+    ReplanController,
+)
+from repro.core.resources import default_fleet
+from repro.core.schedulers.base import ScheduleResult
+from repro.obs import bridge
+from repro.obs import metrics as obs_metrics
+
+FLEET = default_fleet()
+JOB = TrainingJob()
+SPECS = ctrdnn_layers()
+CPU = FLEET[0]
+
+
+def snap(pull_b=0.0, pull_s=0.0, push_b=0.0, push_s=0.0, *,
+         queue=0.0, tokens=0.0, ttft=None, tpot=None,
+         events=None, degraded=False, dead=()):
+    """A snapshot_resources-shaped dict from raw cumulative numbers."""
+    serve = {"queue_depth": queue, "tokens": tokens}
+    if ttft is not None:
+        serve["ttft"] = ttft
+    if tpot is not None:
+        serve["tpot"] = tpot
+    out = {"resource": CPU, "embedding_odt": (0.0, 0.0), "serve": serve,
+           "ps": {"pull": {"bytes": pull_b, "seconds": pull_s, "rows": 0},
+                  "push": {"bytes": push_b, "seconds": push_s, "rows": 0}}}
+    if events is not None or degraded or dead:
+        out["ps_health"] = {"degraded": degraded,
+                            "dead_shards": list(dead),
+                            "events": dict(events or {})}
+    return out
+
+
+class TrafficFeed:
+    """Cumulative fake PS traffic whose windowed rates are exact
+    multiples of the CPU type's nominal bandwidths."""
+
+    def __init__(self):
+        self.pb = self.ps_ = self.qb = self.qs = 0.0
+
+    def window(self, scale: float, **kw) -> dict:
+        pull_b = scale * CPU.ingest_bw
+        push_b = 2 * scale * CPU.net_bw - pull_b
+        self.pb += pull_b
+        self.ps_ += 1.0
+        self.qb += push_b
+        self.qs += 1.0
+        return snap(self.pb, self.ps_, self.qb, self.qs, **kw)
+
+
+class FakeScheduler:
+    """Returns a fixed alternative plan costed relative to the warm
+    start's true cost — lets tests pin the margin logic exactly."""
+
+    def __init__(self, alt, factor):
+        self.alt = tuple(alt)
+        self.factor = factor
+        self.calls = 0
+        self.last_warm = None
+
+    def schedule_many(self, specs, warm_starts=None):
+        self.calls += 1
+        self.last_warm = warm_starts
+        profiles, fleet, job = specs[0]
+        inc = warm_starts[0][0]
+        inc_cost, _ = plan_cost(SchedulingPlan(tuple(inc)), profiles,
+                                fleet, job)
+        return [ScheduleResult(plan=SchedulingPlan(self.alt), prov=None,
+                               cost=self.factor * inc_cost,
+                               wall_time_s=0.0, evaluations=0)]
+
+
+def make_controller(sched, cfg=None, initial=None):
+    clock = {"t": 0.0}
+    cfg = cfg or ReplanConfig(window_steps=1, bw_tolerance=0.5,
+                              hysteresis_windows=2, cooldown_windows=2,
+                              switch_margin=0.05)
+    initial = initial if initial is not None else tuple(
+        0 if k in ("embedding", "nce") else 1
+        for k, *_ in SPECS)
+    ctl = ReplanController(SPECS, FLEET, JOB, sched, snapshot_fn=lambda: None,
+                           config=cfg, clock=lambda: clock["t"],
+                           initial=initial)
+    def observe(snapshot):
+        clock["t"] += 5.0
+        return ctl.observe(snapshot=snapshot)
+    return ctl, observe
+
+
+def calibrate(ctl, observe, feed):
+    observe(feed.window(1.0))   # opens the first window
+    d = observe(feed.window(1.0))
+    assert d is not None and d["kind"] == "calibrate"
+    assert ctl.calibrations == 1 and ctl.considered == 0
+    return d
+
+
+# --- windowed delta arithmetic -------------------------------------------
+
+def test_snapshot_delta_interval_rates():
+    prev = snap(100.0, 1.0, 50.0, 0.5, queue=2.0, tokens=10.0,
+                ttft={"count": 3, "p99": 0.1},
+                events={"kill": 0})
+    cur = snap(700.0, 3.0, 250.0, 1.5, queue=5.0, tokens=25.0,
+               ttft={"count": 8, "p99": 0.4},
+               events={"kill": 1}, degraded=True, dead=[0])
+    d = bridge.snapshot_delta(prev, cur, 10.0)
+    assert d.seconds == 10.0
+    assert d.pull_bytes == 600.0 and d.pull_seconds == 2.0
+    assert d.push_bytes == 200.0 and d.push_seconds == 1.0
+    # interval rates, NOT lifetime averages (700/3 would be the lifetime)
+    assert d.ingest_bw == pytest.approx(300.0)
+    assert d.net_bw == pytest.approx(800.0 / 3.0)
+    assert d.tokens == 15.0
+    assert d.queue_depth == 5.0 and d.queue_growth == 3.0
+    assert d.ttft_completed == 5.0 and d.ttft["p99"] == 0.4
+    assert d.ps_degraded and d.dead_shards == 1 and d.fleet_events == 1
+    # re-anchoring keeps base constants where there is no traffic
+    res = d.resource(CPU)
+    assert res.ingest_bw == pytest.approx(300.0)
+    empty = bridge.snapshot_delta(cur, cur, 1.0)
+    assert not empty.has_ps_traffic
+    assert empty.resource(CPU).ingest_bw == CPU.ingest_bw
+    assert empty.embedding_odt(100) == (0.0, 0.0)
+
+
+def test_snapshot_delta_embedding_odt_windowed():
+    prev = snap(0.0, 0.0, 0.0, 0.0)
+    cur = snap(10.0, 2.0, 10.0, 1.0)
+    d = bridge.snapshot_delta(prev, cur, 1.0)
+    from repro.core.profiles import B_O
+
+    sync, act = d.embedding_odt(100)
+    assert sync == pytest.approx(3.0 / 100 * B_O)
+    assert act == pytest.approx(2.0 / 100 * B_O)
+
+
+# --- drift detector -------------------------------------------------------
+
+def det(cfg=None):
+    cfg = cfg or ReplanConfig(bw_tolerance=0.5, hysteresis_windows=2,
+                              ttft_slo_s=0.2, queue_growth=4.0)
+    return DriftDetector(cfg, ingest_bw=100.0, net_bw=100.0), cfg
+
+
+def delta(**kw):
+    prev = snap()
+    fields = dict(pull_b=kw.pop("pull_b", 0.0),
+                  pull_s=kw.pop("pull_s", 0.0),
+                  push_b=kw.pop("push_b", 0.0),
+                  push_s=kw.pop("push_s", 0.0))
+    return bridge.snapshot_delta(prev, snap(**fields, **kw), 1.0)
+
+
+def test_detector_bandwidth_hysteresis():
+    d, _ = det()
+    drifted = delta(pull_b=20.0, pull_s=1.0, push_b=20.0, push_s=1.0)
+    assert d.check(drifted) == []          # streak 1 < hysteresis 2
+    assert d.check(drifted) == ["ingest_bw", "net_bw"]
+    # an in-tolerance window resets the streak
+    steady = delta(pull_b=100.0, pull_s=1.0, push_b=100.0, push_s=1.0)
+    assert d.check(steady) == []
+    assert d.check(drifted) == []          # streak restarted
+
+
+def test_detector_min_traffic_gate():
+    d, _ = det()
+    tiny = delta(pull_b=1e-9, pull_s=1e-9)  # absurd rate, negligible traffic
+    assert d.check(tiny) == []
+    assert d.check(tiny) == []
+
+
+def test_detector_edge_signals_fire_once():
+    d, _ = det()
+    kill = bridge.snapshot_delta(snap(events={"kill": 0}),
+                                 snap(events={"kill": 1}, degraded=True,
+                                      dead=[0]), 1.0)
+    assert sorted(d.check(kill)) == ["fleet_events", "ps_degraded"]
+    # persistently degraded, no new events: nothing re-fires
+    still = bridge.snapshot_delta(snap(events={"kill": 1}, degraded=True),
+                                  snap(events={"kill": 1}, degraded=True,
+                                       dead=[0]), 1.0)
+    assert d.check(still) == []
+
+
+def test_detector_slo_and_queue():
+    d, _ = det()
+    bad = delta(ttft={"count": 5, "p99": 0.5}, queue=10.0)
+    assert d.check(bad) == []
+    assert sorted(d.check(bad)) == ["queue_growth", "ttft_slo"]
+    # SLO violation with zero completions in the window must not count
+    d2, _ = det()
+    stale = bridge.snapshot_delta(snap(ttft={"count": 5, "p99": 0.5}),
+                                  snap(ttft={"count": 5, "p99": 0.5}), 1.0)
+    assert d2.check(stale) == []
+    assert d2.check(stale) == []
+
+
+def test_detector_reanchor_absorbs_shift():
+    d, _ = det()
+    drifted = delta(pull_b=20.0, pull_s=1.0, push_b=20.0, push_s=1.0)
+    d.check(drifted)
+    assert d.check(drifted) != []
+    d.reanchor(ingest_bw=drifted.ingest_bw, net_bw=drifted.net_bw)
+    assert d.check(drifted) == []
+    assert d.check(drifted) == []          # the new normal
+
+
+# --- controller: calibration, triggers, cooldown, margin ------------------
+
+def test_controller_calibrates_then_stays_quiet():
+    sched = FakeScheduler(alt=(1,) * len(SPECS), factor=10.0)
+    ctl, observe = make_controller(sched)
+    feed = TrafficFeed()
+    calibrate(ctl, observe, feed)
+    for _ in range(6):
+        assert observe(feed.window(1.0)) is None
+    assert ctl.considered == 0 and sched.calls == 1
+
+
+def test_controller_exactly_one_replan_per_shift_no_flap():
+    # worse-than-incumbent during calibration so the calibrate replan
+    # does not already swap the plan; better after the shift
+    sched = FakeScheduler(alt=(1,) * len(SPECS), factor=10.0)
+    ctl, observe = make_controller(sched)
+    feed = TrafficFeed()
+    calibrate(ctl, observe, feed)
+    sched.factor = 0.5
+    decisions = [observe(feed.window(0.15)) for _ in range(10)]
+    fired = [d for d in decisions if d is not None]
+    assert len(fired) == 1 and fired[0]["kind"] == "drift"
+    assert ctl.considered == 1 and ctl.applied == 1
+    assert ctl.incumbent.assignment == sched.alt
+    # the shift is the new baseline: further identical windows are quiet
+    for _ in range(5):
+        assert observe(feed.window(0.15)) is None
+    assert ctl.considered == 1
+
+
+def test_controller_switch_margin_keeps_incumbent():
+    # candidate 4% better: inside the 5% switch margin -> not applied
+    sched = FakeScheduler(alt=(1,) * len(SPECS), factor=10.0)
+    ctl, observe = make_controller(sched)
+    inc0 = ctl.incumbent.assignment
+    feed = TrafficFeed()
+    calibrate(ctl, observe, feed)
+    sched.factor = 0.96
+    fired = [d for d in (observe(feed.window(0.15)) for _ in range(6)) if d]
+    assert len(fired) == 1 and fired[0]["applied"] is False
+    assert ctl.incumbent.assignment == inc0
+    assert ctl.considered == 1 and ctl.applied == 0
+    # and the incumbent was re-scored against the live profiles
+    assert ctl.incumbent.cost == pytest.approx(fired[0]["incumbent_cost"])
+
+
+def test_controller_cooldown_blocks_next_window():
+    # cooldown 3, then a *different* second shift right after the first
+    sched = FakeScheduler(alt=(1,) * len(SPECS), factor=10.0)
+    cfg = ReplanConfig(window_steps=1, bw_tolerance=0.5,
+                       hysteresis_windows=1, cooldown_windows=3,
+                       switch_margin=0.05)
+    ctl, observe = make_controller(sched, cfg=cfg)
+    feed = TrafficFeed()
+    calibrate(ctl, observe, feed)
+    sched.factor = 0.5
+    assert observe(feed.window(0.15)) is not None    # hysteresis=1: fires
+    # second, deeper shift lands inside the cooldown: suppressed
+    for _ in range(3):
+        assert observe(feed.window(0.02)) is None
+    assert ctl.considered == 1
+    # after cooldown the (still-shifted) rates CAN fire again
+    assert observe(feed.window(0.02)) is not None
+    assert ctl.considered == 2
+
+
+def test_controller_passes_incumbent_as_warm_start():
+    sched = FakeScheduler(alt=(1,) * len(SPECS), factor=10.0)
+    ctl, observe = make_controller(sched)
+    inc0 = ctl.incumbent.assignment
+    feed = TrafficFeed()
+    calibrate(ctl, observe, feed)
+    assert sched.last_warm == [(inc0,)]
+
+
+def test_controller_report_shape():
+    sched = FakeScheduler(alt=(1,) * len(SPECS), factor=10.0)
+    ctl, observe = make_controller(sched)
+    feed = TrafficFeed()
+    calibrate(ctl, observe, feed)
+    sched.factor = 0.5
+    [observe(feed.window(0.15)) for _ in range(4)]
+    r = ctl.report()
+    assert r["windows"] >= 5 and r["calibrations"] == 1
+    assert r["considered"] == 1 and r["applied"] == 1
+    assert r["decisions"][0]["kind"] == "calibrate"
+    assert r["incumbent"]["assignment"] == list(ctl.incumbent.assignment)
+
+
+# --- warm-start seam in the real scheduler --------------------------------
+
+def test_rl_warm_start_never_worse_than_incumbent():
+    from repro.core.schedulers.rl import RLScheduler
+
+    profiles = profile_layers(SPECS, FLEET)
+    warm = tuple(0 if p.kind in ("embedding", "nce") else 1
+                 for p in profiles)
+    warm_cost, _ = plan_cost(SchedulingPlan(warm), profiles, FLEET, JOB)
+    assert math.isfinite(warm_cost)
+    # a 2-round search finds nothing on its own — the warm anchor must
+    # still bound the result
+    sched = RLScheduler(rounds=2, plans_per_round=4, early_stop_rounds=2,
+                        fused=False, seed=0)
+    res = sched.schedule_many([(profiles, FLEET, JOB)],
+                              warm_starts=[(warm,)])[0]
+    assert res.cost <= warm_cost + 1e-9
+
+
+def test_rl_warm_start_ignores_malformed():
+    from repro.core.schedulers.rl import RLScheduler
+
+    profiles = profile_layers(SPECS, FLEET)
+    sched = RLScheduler(rounds=2, plans_per_round=4, early_stop_rounds=2,
+                        fused=False, seed=0)
+    bad = ((99,) * len(profiles), (0,) * (len(profiles) - 1))
+    res = sched.schedule_many([(profiles, FLEET, JOB)],
+                              warm_starts=[bad])[0]
+    assert res.feasible
+
+
+# --- measurement-bug regressions ------------------------------------------
+
+def test_ps_traffic_skips_closed_registries():
+    a = obs_metrics.Registry("replan-test-a", enabled=True)
+    b = obs_metrics.Registry("replan-test-b", enabled=True)
+    for reg, byts in ((a, 1000.0), (b, 500.0)):
+        reg.counter("ps.bytes", dir="pull", shard=0).inc(byts)
+        reg.counter("ps.seconds", dir="pull", shard=0).inc(1.0)
+    a.close()
+    out = bridge._ps_traffic(registries=[a, b])
+    # the closed registry's stale cumulative traffic must not bleed in
+    assert out["pull"]["bytes"] == 500.0
+    assert out["pull"]["seconds"] == 1.0
+
+
+def test_telemetry_close_marks_registry():
+    from repro.ps.telemetry import PSTelemetry
+
+    tel = PSTelemetry(2)
+    assert not tel.registry.closed
+    tel.close()
+    assert tel.registry.closed
+    assert tel.registry not in obs_metrics.live_registries()
+    # reads keep working as history
+    assert tel.totals()["pull"]["bytes"] == 0
+
+
+def test_serve_signals_merges_multistream_histograms():
+    reg = obs_metrics.Registry("replan-test-serve", enabled=True)
+    h1 = reg.histogram("serve.ttft_s", stream="a")
+    h2 = reg.histogram("serve.ttft_s", stream="b")
+    for v in (0.01, 0.02, 0.03):
+        h1.record(v)
+    for v in (1.0, 2.0, 3.0):
+        h2.record(v)
+    sig = bridge._serve_signals(reg)
+    # pooled, not last-writer-wins: count is the union and the p99 must
+    # reflect the slow stream regardless of find() iteration order
+    assert sig["ttft"]["count"] == 6
+    assert sig["ttft"]["streams"] == 2
+    assert sig["ttft"]["p99"] >= 3.0 / obs_metrics.GROWTH
+    assert sig["ttft"]["min"] == pytest.approx(0.01)
+    assert sig["ttft"]["max"] == pytest.approx(3.0)
+
+
+def test_merge_histograms_matches_single():
+    rng = np.random.default_rng(0)
+    reg = obs_metrics.Registry("replan-test-merge", enabled=True)
+    parts = [reg.histogram("h", i=i) for i in range(3)]
+    union = reg.histogram("h", i="all")
+    vals = rng.lognormal(0.0, 2.0, 300)
+    for i, v in enumerate(vals):
+        parts[i % 3].record(float(v))
+        union.record(float(v))
+    merged = obs_metrics.merge_histograms(parts)
+    single = union.snapshot()
+    for k in ("count", "sum", "min", "max", "p50", "p95", "p99"):
+        assert merged[k] == pytest.approx(single[k]), k
+    assert obs_metrics.merge_histograms([]) == {
+        "count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0, "max": 0.0,
+        "p50": 0.0, "p95": 0.0, "p99": 0.0}
