@@ -1,0 +1,31 @@
+"""Overload-robustness suite: the 2× sustained-overload no-collapse gate
+plus the preempt-resume bit-exactness gate (PR 10).
+
+A thin registration wrapper over :mod:`benchmarks.bench_slo` so the
+harness (``benchmarks/run.py``) and the ``serve-overload`` CI lane can
+run the overload scenario as its own suite with its own artifact,
+independent of the base open-loop SLO harness:
+
+  PYTHONPATH=src python -m benchmarks.run --only slo-overload
+  PYTHONPATH=src python benchmarks/bench_slo.py --smoke --scenario overload
+"""
+
+from __future__ import annotations
+
+try:
+    from benchmarks import bench_slo
+except ImportError:  # run directly: python benchmarks/bench_slo_overload.py
+    import bench_slo
+
+
+def run() -> dict:
+    """Harness entry: full-size overload scenario + preempt gate."""
+    return {"overload": bench_slo.run_overload(smoke=False),
+            "preempt": bench_slo.run_preempt_gate()}
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.argv = [sys.argv[0], "--scenario", "overload"] + sys.argv[1:]
+    bench_slo.main()

@@ -31,6 +31,7 @@ SUITES = [
     ("chaos", "benchmarks.bench_chaos"),
     ("serve", "benchmarks.bench_serve"),
     ("slo", "benchmarks.bench_slo"),
+    ("slo-overload", "benchmarks.bench_slo_overload"),
     ("replan", "benchmarks.bench_replan"),
 ]
 

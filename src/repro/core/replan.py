@@ -184,6 +184,108 @@ class DriftDetector:
         return reasons
 
 
+class AdmissionActuator:
+    """AIMD tuning of an :class:`~repro.core.admission.AdmissionPolicy`
+    from windowed serve telemetry — the actuation half of the ROADMAP's
+    "admission-control policy the scheduler itself tunes".
+
+    Fed one :class:`~repro.obs.bridge.SnapshotDelta` per controller
+    window (:meth:`tune`), it classifies the window:
+
+    * **breach** — admitted-request TTFT p99 above ``ttft_slo_s`` (with
+      completions in the window, so an idle window can't breach) or any
+      in-window deadline timeout.  Response is multiplicative decrease
+      of ``queue_bound`` — the primary lever: decode chunks are fixed-
+      shape jitted over *all* slots, so TPOT is ~flat in concurrency and
+      admitted TTFT is dominated by queued wait, which the queue bound
+      caps directly.  After ``concurrency_after`` *consecutive* breach
+      windows the queue bound alone is judged insufficient and
+      ``max_concurrency`` is also decreased.
+    * **healthy** — no breach and the window saw progress (completions
+      or deadline-met tokens).  Response is additive increase of both
+      knobs back toward their ceilings, reclaiming capacity the next
+      burst can use.
+
+    Idle windows (no breach, no progress) leave the knobs alone.  The
+    policy's knobs are plain attributes read by the serve loop each
+    admission pass, so retuning from the controller thread is a
+    single-attribute write — safe under the GIL, effective on the very
+    next admission decision.
+    """
+
+    def __init__(self, policy, *, ttft_slo_s: float = 0.0,
+                 decrease: float = 0.5, increase: int = 1,
+                 min_queue_bound: int = 1,
+                 max_queue_bound: int | None = None,
+                 min_concurrency: int = 1, concurrency_after: int = 2):
+        if not 0.0 < decrease < 1.0:
+            raise ValueError(f"decrease must be in (0, 1), got {decrease}")
+        self.policy = policy
+        self.ttft_slo_s = float(ttft_slo_s)
+        self.decrease = float(decrease)
+        self.increase = int(increase)
+        self.min_queue_bound = int(min_queue_bound)
+        # an unbounded policy needs a finite ceiling to climb back to
+        self.max_queue_bound = (int(max_queue_bound)
+                                if max_queue_bound is not None
+                                else (policy.queue_bound
+                                      if policy.queue_bound is not None
+                                      else 8 * policy.slots))
+        self.min_concurrency = int(min_concurrency)
+        self.concurrency_after = int(concurrency_after)
+        self._breach_streak = 0
+        self.breaches = 0
+        self.decisions: list[dict] = []
+
+    def tune(self, delta) -> dict | None:
+        """Apply one window of telemetry; returns the decision applied
+        (``None`` for an idle window)."""
+        p = self.policy
+        ttft_breach = (self.ttft_slo_s > 0.0 and delta.ttft is not None
+                       and delta.ttft_completed > 0
+                       and delta.ttft["p99"] > self.ttft_slo_s)
+        breach = ttft_breach or delta.timed_out > 0
+        progressed = delta.completed > 0 or delta.good_tokens > 0
+        if not breach and not progressed:
+            return None
+        qb = p.queue_bound if p.queue_bound is not None \
+            else self.max_queue_bound
+        mc = p.max_concurrency
+        if breach:
+            self.breaches += 1
+            self._breach_streak += 1
+            p.queue_bound = max(self.min_queue_bound,
+                                int(qb * self.decrease))
+            if self._breach_streak >= self.concurrency_after:
+                p.max_concurrency = max(self.min_concurrency,
+                                        int(mc * self.decrease))
+            action = "decrease"
+        else:
+            self._breach_streak = 0
+            p.queue_bound = min(self.max_queue_bound, qb + self.increase)
+            p.max_concurrency = min(p.slots, mc + self.increase)
+            action = "increase"
+        decision = {
+            "action": action,
+            "ttft_breach": ttft_breach,
+            "timed_out": float(delta.timed_out),
+            "queue_bound": (qb, p.queue_bound),
+            "max_concurrency": (mc, p.max_concurrency),
+            "breach_streak": self._breach_streak,
+        }
+        self.decisions.append(decision)
+        return decision
+
+    def report(self) -> dict:
+        return {
+            "ttft_slo_s": self.ttft_slo_s,
+            "breaches": self.breaches,
+            "queue_bound": self.policy.queue_bound,
+            "max_concurrency": self.policy.max_concurrency,
+            "decisions": list(self.decisions),
+        }
+
+
 class ReplanController:
     """Windows live snapshots, detects drift, re-plans with hysteresis.
 
@@ -217,6 +319,7 @@ class ReplanController:
         base_index: int = 0,
         clock: Callable[[], float] = time.monotonic,
         initial: Sequence[int] | None = None,
+        admission: AdmissionActuator | None = None,
     ):
         self.layer_specs = list(layer_specs)
         self.fleet = list(fleet)
@@ -226,6 +329,7 @@ class ReplanController:
         self.cfg = config if config is not None else ReplanConfig()
         self.base_index = base_index
         self.clock = clock
+        self.admission = admission
 
         profiles = profile_layers(self.layer_specs, self.fleet)
         if initial is not None:
@@ -307,6 +411,12 @@ class ReplanController:
         self._prev, self._prev_t = snap, now
         self._prev_examples = self._examples
         self.windows += 1
+
+        if self.admission is not None:
+            # admission actuation is per-window and independent of the
+            # (hysteresis/cooldown-gated) replan path: overload must be
+            # answered on the window it appears in, not two windows later
+            self.admission.tune(delta)
 
         if not self._calibrated:
             if not delta.has_ps_traffic:
@@ -420,7 +530,7 @@ class ReplanController:
 
     # --- reporting -------------------------------------------------------
     def report(self) -> dict:
-        return {
+        out = {
             "windows": self.windows,
             "calibrations": self.calibrations,
             "considered": self.considered,
@@ -432,6 +542,9 @@ class ReplanController:
                 "cost": self.incumbent.cost,
             },
         }
+        if self.admission is not None:
+            out["admission"] = self.admission.report()
+        return out
 
 
 def ctr_replan_factory(config: ReplanConfig | None = None, *,

@@ -69,8 +69,19 @@ class PagePool:
 
     Invariants (property-tested in ``tests/test_serve_paged.py``):
       * no physical page is owned by two live slots;
-      * ``free + Σ owned == num_pages - 1`` across any admit/evict
-        sequence (the free list is conserved — freed pages recycle).
+      * ``free + Σ owned == num_pages - 1`` across any admit/preempt/
+        evict sequence (the free list is conserved — freed pages
+        recycle; reservations withhold availability without moving
+        pages, so they never break conservation).
+
+    **Preempt/reserve seam** (overload robustness): :meth:`preempt`
+    releases a live slot's pages exactly like :meth:`evict` but records
+    the event — the host keeps the sequence's generated tokens and later
+    re-admits it by prefilling prompt + generated-so-far.
+    :meth:`reserve` withholds free pages from ordinary admissions (e.g.
+    for the request whose arrival triggered a preemption, so the pages
+    the victim just released cannot be raced away by another admission
+    path); an admission with ``from_reservation=True`` consumes them.
     """
 
     def __init__(self, num_pages: int, page_size: int, slots: int,
@@ -83,6 +94,8 @@ class PagePool:
         # LIFO free list: recently freed (cache-warm) pages go out first
         self._free: list[int] = list(range(num_pages - 1, 0, -1))
         self._owned: list[list[int]] = [[] for _ in range(slots)]
+        self._reserved = 0
+        self.preempt_count = 0
         self.table = np.full((slots, pages_per_seq), SCRATCH_PAGE, np.int32)
 
     # -- queries ----------------------------------------------------------
@@ -91,6 +104,15 @@ class PagePool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def reserved_pages(self) -> int:
+        return self._reserved
+
+    @property
+    def available_pages(self) -> int:
+        """Free pages not withheld by a reservation."""
+        return len(self._free) - self._reserved
+
     def owned_pages(self, slot: int) -> tuple[int, ...]:
         return tuple(self._owned[slot])
 
@@ -98,14 +120,36 @@ class PagePool:
         """Pages needed to hold ``tokens`` cache entries."""
         return max(1, -(-tokens // self.page_size))
 
-    def can_admit(self, tokens: int) -> bool:
+    def can_admit(self, tokens: int, *, from_reservation: bool = False) -> bool:
         n = self.pages_for(tokens)
-        return n <= self.pages_per_seq and n <= len(self._free)
+        avail = len(self._free) if from_reservation else self.available_pages
+        return n <= self.pages_per_seq and n <= avail
 
     # -- mutations --------------------------------------------------------
 
-    def admit(self, slot: int, tokens: int) -> None:
-        """Allocate pages covering ``tokens`` positions to an empty slot."""
+    def reserve(self, tokens: int) -> bool:
+        """Withhold the pages ``tokens`` positions need from ordinary
+        admissions; ``False`` (no-op) when they are not available."""
+        n = self.pages_for(tokens)
+        if n > self.pages_per_seq or n > self.available_pages:
+            return False
+        self._reserved += n
+        return True
+
+    def cancel_reservation(self, tokens: int) -> None:
+        """Return a :meth:`reserve`-d allotment to general availability."""
+        n = self.pages_for(tokens)
+        if n > self._reserved:
+            raise ValueError(
+                f"cancelling {n} pages but only {self._reserved} reserved")
+        self._reserved -= n
+
+    def admit(self, slot: int, tokens: int, *,
+              from_reservation: bool = False) -> None:
+        """Allocate pages covering ``tokens`` positions to an empty slot.
+
+        ``from_reservation=True`` consumes a matching :meth:`reserve`
+        allotment instead of drawing on general availability."""
         if self._owned[slot]:
             raise ValueError(f"slot {slot} already live")
         n = self.pages_for(tokens)
@@ -113,18 +157,41 @@ class PagePool:
             raise ValueError(
                 f"{tokens} tokens need {n} pages > pages_per_seq="
                 f"{self.pages_per_seq}")
+        if from_reservation:
+            if n > self._reserved:
+                raise ValueError(
+                    f"admit from_reservation needs {n} pages but only "
+                    f"{self._reserved} are reserved")
+            self._reserved -= n
+        elif n > self.available_pages:
+            raise MemoryError(
+                f"pool exhausted: need {n} pages, {self.available_pages} "
+                f"available ({len(self._free)} free, {self._reserved} "
+                f"reserved)")
         if n > len(self._free):
             raise MemoryError(
                 f"pool exhausted: need {n} pages, {len(self._free)} free")
         self.grow(slot, tokens)
 
+    def preempt(self, slot: int) -> int:
+        """Release a live slot's pages back to the pool so a more urgent
+        request can run; the host keeps the sequence's tokens and resumes
+        it later via prefill.  Returns the number of pages freed."""
+        n = len(self._owned[slot])
+        if n == 0:
+            raise ValueError(f"slot {slot} is not live — nothing to preempt")
+        self.evict(slot)
+        self.preempt_count += 1
+        return n
+
     def grow(self, slot: int, tokens: int) -> None:
-        """Extend a slot's allocation to cover ``tokens`` positions."""
+        """Extend a slot's allocation to cover ``tokens`` positions
+        (never draws pages below the reserved watermark)."""
         need = self.pages_for(tokens)
         if need > self.pages_per_seq:
             raise ValueError(f"{tokens} tokens exceed pages_per_seq capacity")
         while len(self._owned[slot]) < need:
-            if not self._free:
+            if not self._free or self.available_pages <= 0:
                 raise MemoryError("pool exhausted")
             pid = self._free.pop()
             self.table[slot, len(self._owned[slot])] = pid

@@ -33,6 +33,8 @@ import numpy as np
 
 from repro import obs
 from repro.configs import ARCH_IDS, get_config
+from repro.core.admission import (AdmissionPolicy, COMPLETED, OUTCOMES,
+                                  PREEMPTED, REJECTED, TIMED_OUT)
 from repro.kernels.paged_attention import PagePool
 from repro.models import decoder as dec
 from repro.models.profile import kv_read_bytes_per_token
@@ -159,7 +161,13 @@ def serve_continuous(arch: str, *, reduced: bool = True,
                      num_pages: int | None = None,
                      max_seq_len: int | None = None, decode_chunk: int = 8,
                      seed: int = 0, compute_dtype=jnp.float32,
-                     arrival_s: list[float] | None = None) -> dict:
+                     arrival_s: list[float] | None = None,
+                     deadlines=None,
+                     admission: AdmissionPolicy | None = None,
+                     preemption: bool = False, max_preemptions: int = 1,
+                     watchdog_s: float | None = None,
+                     max_wall_s: float | None = None,
+                     clock=None) -> dict:
     """Continuous-batching serve over variable-length requests.
 
     Each request ``(prompt_len, gen_len)`` is admitted into a free batch
@@ -182,6 +190,39 @@ def serve_continuous(arch: str, *, reduced: bool = True,
     the ``serve.ttft_s`` / ``serve.tpot_s`` histograms the obs bridge and
     ``benchmarks/bench_slo.py`` read.  Without it every request arrives
     at t=0 (closed-loop, TTFT includes queueing as before).
+
+    **Overload robustness** (see DESIGN.md "Overload robustness"):
+
+    * every request terminates in exactly one typed outcome —
+      ``completed`` / ``rejected`` / ``timed_out`` / ``preempted``
+      (``result["outcomes"]``; nothing can hang, including requests
+      whose page need exceeds the pool, which are *rejected at arrival*
+      instead of waiting forever on an eviction that cannot help);
+    * ``deadlines`` — one ``(ttft_deadline_s, total_deadline_s)`` pair
+      (applied to all requests) or one pair per request, offsets from
+      each request's arrival (``None`` entries disable that deadline).
+      The ``admission`` policy (default: an untuned
+      :class:`~repro.core.admission.AdmissionPolicy`) rejects arrivals
+      that provably cannot meet their deadline under measured
+      prefill/TPOT rates, bounds the admission queue, and caps decode
+      concurrency; queued requests whose deadline passes are reaped as
+      ``timed_out``, and in-flight requests past their total deadline
+      are evicted mid-decode with their partial output;
+    * ``preemption=True`` — when the arrived head is blocked on pool
+      pages, a victim slot with strictly more remaining work is
+      preempted (pages released via :meth:`PagePool.preempt`, generated
+      tokens kept host-side) and later resumed by prefilling
+      prompt + generated-so-far; the resumed token stream is bit-exact
+      vs an un-preempted run (pinned in tests/test_admission.py);
+    * ``watchdog_s`` — decode chunks slower than this emit a
+      ``serve.stall`` obs instant and trigger a shed pass over the
+      queue; ``max_wall_s`` hard-stops the loop (in-flight →
+      ``preempted``, queued → ``rejected``) so a wedged run still ends
+      with typed outcomes;
+    * ``clock`` — injectable time source (default
+      ``time.perf_counter``); a virtual clock makes deadline/arrival
+      behaviour deterministic in tests (idle waits then spin on the
+      clock instead of sleeping).
     """
     cfg = dataclasses.replace(get_config(arch, reduced=reduced),
                               kv_impl="paged")
@@ -189,6 +230,7 @@ def serve_continuous(arch: str, *, reduced: bool = True,
     params = dec.init_model(cfg, key)
     if requests is None:
         requests = _default_requests()
+    n_req = len(requests)
     if max_seq_len is None:
         max_seq_len = max(p + g for p, g in requests) + decode_chunk
     pages_per_seq = -(-max_seq_len // page_size)
@@ -208,92 +250,350 @@ def serve_continuous(arch: str, *, reduced: bool = True,
                                         compute_dtype=compute_dtype)
     )
 
-    if arrival_s is not None and len(arrival_s) != len(requests):
+    if arrival_s is not None:
+        if len(arrival_s) != n_req:
+            raise ValueError(
+                f"arrival_s has {len(arrival_s)} entries for "
+                f"{n_req} requests")
+        for i in range(1, n_req):
+            if arrival_s[i] < arrival_s[i - 1]:
+                raise ValueError(
+                    f"arrival_s must be non-decreasing (the admission "
+                    f"queue is FIFO in arrival order) but arrival_s[{i}]="
+                    f"{arrival_s[i]} < arrival_s[{i - 1}]="
+                    f"{arrival_s[i - 1]} — sort requests, arrival_s and "
+                    f"deadlines together by arrival time")
+    if deadlines is None:
+        deadlines = [(None, None)] * n_req
+    elif isinstance(deadlines, tuple):
+        deadlines = [deadlines] * n_req
+    elif len(deadlines) != n_req:
         raise ValueError(
-            f"arrival_s has {len(arrival_s)} entries for "
-            f"{len(requests)} requests")
-    queue = deque(enumerate(requests))
+            f"deadlines has {len(deadlines)} entries for {n_req} requests")
+    policy = admission if admission is not None else AdmissionPolicy(
+        slots=slots)
+    clk = clock if clock is not None else time.perf_counter
+    real_time = clock is None
+
+    pending = deque(enumerate(requests))   # not yet arrived (FIFO)
+    arrived: deque = deque()               # admission queue: (rid, req)
+    resume_q: deque = deque()              # preempted rids awaiting resume
+    suspended: dict[int, dict] = {}        # rid -> {tok, done, rem}
     slot_req: list[list | None] = [None] * slots   # [rid, gen_remaining]
     cur_tok = np.zeros((slots, 1), np.int32)
     lengths = np.zeros(slots, np.int32)
     active = np.zeros(slots, bool)
     outputs: list[list[int]] = [[] for _ in requests]
+    outcomes: list[str | None] = [None] * n_req
+    outcome_detail: list[str | None] = [None] * n_req
+    preempt_count = [0] * n_req
     el = np.dtype(compute_dtype).itemsize
     dense_equiv_len = pages_per_seq * page_size
     kv_spans: list[tuple[int, int]] = []   # (start_len, n_tokens) per slot
     toks_done = 0
+    good_tokens = 0
     prefills = 0
+    resumes = 0
     peak_pages = 0
     reg = obs.REGISTRY
     reg.gauge("serve.pool_pages_total").set(num_pages - 1)
-    first_tok_t: list[float | None] = [None] * len(requests)
-    ttft_s: list[float | None] = [None] * len(requests)
-    tpot_s: list[float | None] = [None] * len(requests)
+    first_tok_t: list[float | None] = [None] * n_req
+    ttft_s: list[float | None] = [None] * n_req
+    tpot_s: list[float | None] = [None] * n_req
+    total_s: list[float | None] = [None] * n_req
+
+    def _arrival(rid: int) -> float:
+        return t0 + (arrival_s[rid] if arrival_s is not None else 0.0)
 
     def _gauges():
-        reg.gauge("serve.queue_depth").set(len(queue))
+        reg.gauge("serve.queue_depth").set(len(arrived) + len(resume_q))
         reg.gauge("serve.pool_pages_used").set(
             (num_pages - 1) - pool.free_pages)
 
-    def admit():
-        nonlocal cache, prefills
-        for s in range(slots):
-            if slot_req[s] is not None or not queue:
-                continue
-            rid, (plen, g) = queue[0]
-            if arrival_s is not None and time.perf_counter() - t0 < arrival_s[rid]:
-                break                       # FIFO: head hasn't arrived yet
+    def _slack(rid: int, now: float) -> float | None:
+        """Smallest remaining deadline margin (negative = missed)."""
+        ttft_dl, total_dl = deadlines[rid]
+        margins = []
+        if ttft_dl is not None:
+            # never-prefilled requests (queued reap) count queueing time
+            elapsed = (ttft_s[rid] if ttft_s[rid] is not None
+                       else now - _arrival(rid))
+            margins.append(ttft_dl - elapsed)
+        if total_dl is not None:
+            margins.append(_arrival(rid) + total_dl - now)
+        return min(margins) if margins else None
+
+    def _finish_metrics(rid: int, now: float) -> None:
+        slack = _slack(rid, now)
+        if slack is not None:
+            reg.histogram("serve.deadline_slack_s").record(slack)
+
+    def _reject(rid: int, reason: str, detail: str | None = None) -> None:
+        outcomes[rid] = REJECTED
+        outcome_detail[rid] = detail if detail is not None else reason
+        reg.counter("serve.rejected").inc()
+        obs_trace.instant("serve.reject", "serve", rid=rid, reason=reason)
+
+    def _timeout(rid: int, detail: str, now: float) -> None:
+        outcomes[rid] = TIMED_OUT
+        outcome_detail[rid] = detail
+        reg.counter("serve.timed_out").inc()
+        _finish_metrics(rid, now)
+        obs_trace.instant("serve.timeout", "serve", rid=rid, where=detail)
+
+    def _backlog_tokens() -> float:
+        live = sum(max(0, sr[1]) for sr in slot_req if sr is not None)
+        susp = sum(suspended[r]["rem"] for r in resume_q)
+        return live + susp
+
+    def drain_arrivals(now: float) -> None:
+        """Move requests whose arrival time has passed into the admission
+        queue, applying the bounded-queue / oversize / deadline-
+        feasibility policy at the moment they arrive."""
+        while pending and (now - t0) >= (
+                arrival_s[pending[0][0]] if arrival_s is not None else 0.0):
+            rid, (plen, g) = pending.popleft()
             need = plen + g + decode_chunk
-            if not pool.can_admit(need):
-                if pool.pages_for(need) > pool.pages_per_seq:
-                    raise RuntimeError(
-                        f"request {rid} needs {pool.pages_for(need)} pages "
-                        f"> pages_per_seq={pool.pages_per_seq} (raise "
-                        f"max_seq_len)")
-                if not any(active):
-                    raise RuntimeError(
-                        f"request {rid} needs {pool.pages_for(need)} pages; "
-                        f"pool has {num_pages - 1} total")
-                break                       # wait for an eviction
-            queue.popleft()
-            pool.admit(s, need)
-            cache = {**cache, "page_table": jnp.asarray(pool.table)}
-            prompt = jax.random.randint(jax.random.fold_in(key, 1000 + rid),
-                                        (1, plen), 0, cfg.vocab)
-            sub = dec.slot_cache(cache, s)
-            sub = {**sub, "length": jnp.zeros((1,), jnp.int32)}
-            with obs_trace.span("serve.prefill", "serve", rid=rid, slot=s,
-                                prompt_len=plen):
-                lg, sub = prefill_jit(params, prompt, sub)
+            pages = pool.pages_for(need)
+            cap = min(pool.pages_per_seq, num_pages - 1)
+            if pages > cap:
+                # validate NOW: waiting on an eviction can never help a
+                # request the pool cannot hold even when empty
+                _reject(rid, "oversize",
+                        f"request {rid} needs {pages} pages for "
+                        f"{need} tokens but the pool caps a sequence at "
+                        f"{cap} pages (pages_per_seq="
+                        f"{pool.pages_per_seq}, allocatable="
+                        f"{num_pages - 1}) — raise max_seq_len/num_pages "
+                        f"or shrink the request")
+                continue
+            backlog = _backlog_tokens() + sum(r[1][1] for r in arrived)
+            reason = policy.admit_check(
+                now=now, arrival=_arrival(rid), gen=g,
+                ttft_deadline=deadlines[rid][0],
+                total_deadline=deadlines[rid][1],
+                backlog_tokens=backlog, queue_len=len(arrived))
+            if reason is not None:
+                _reject(rid, reason)
+                continue
+            arrived.append((rid, (plen, g)))
+
+    def reap(now: float) -> None:
+        """Shed queued / suspended requests whose deadline has already
+        passed — they terminate ``timed_out`` instead of being admitted
+        (or resumed) only to miss."""
+        for q, where in ((arrived, "queued"), (resume_q, "suspended")):
+            for item in list(q):
+                rid = item if q is resume_q else item[0]
+                ttft_dl, total_dl = deadlines[rid]
+                late = ((ttft_dl is not None and ttft_s[rid] is None
+                         and now > _arrival(rid) + ttft_dl)
+                        or (total_dl is not None
+                            and now > _arrival(rid) + total_dl))
+                if late:
+                    q.remove(item)
+                    if q is resume_q:
+                        suspended.pop(rid, None)
+                    _timeout(rid, f"{where}_past_deadline", now)
+
+    def _prefill_slot(s: int, rid: int, seq, feed_tok: int | None,
+                      start_len: int, rem: int) -> None:
+        """Shared admit/resume tail: prefill ``seq`` into slot ``s`` and
+        mark it live.  ``feed_tok=None`` takes the argmax of the prefill
+        logits (fresh admission, the TTFT edge); otherwise the saved
+        next-token is fed (resume — the argmax is NOT recomputed, so the
+        stream continues exactly where preemption cut it)."""
+        nonlocal cache, prefills
+        cache = {**cache, "page_table": jnp.asarray(pool.table)}
+        sub = dec.slot_cache(cache, s)
+        sub = {**sub, "length": jnp.zeros((1,), jnp.int32)}
+        t_pre = clk()
+        with obs_trace.span("serve.prefill", "serve", rid=rid, slot=s,
+                            prompt_len=int(seq.shape[1])):
+            lg, sub = prefill_jit(params, seq, sub)
+            if feed_tok is None:
                 cur_tok[s, 0] = int(np.argmax(np.asarray(
-                    lg[0, plen - 1, : cfg.vocab])))
-            prefills += 1
-            cache = dec.merge_slot_cache(cache, sub, s)
-            # the np.asarray above synced the prefill: the first output
-            # token exists NOW — that's the TTFT edge
-            done_t = time.perf_counter()
-            first_tok_t[rid] = done_t
-            arrive = t0 + (arrival_s[rid] if arrival_s is not None else 0.0)
-            ttft_s[rid] = done_t - arrive
-            reg.histogram("serve.ttft_s").record(max(ttft_s[rid], 0.0))
-            reg.counter("serve.admissions").inc()
-            lengths[s] = plen
-            active[s] = True
-            slot_req[s] = [rid, g]
+                    lg[0, start_len - 1, : cfg.vocab])))
+            else:
+                jax.block_until_ready(lg)
+                cur_tok[s, 0] = feed_tok
+        policy.observe_prefill(clk() - t_pre)
+        prefills += 1
+        cache = dec.merge_slot_cache(cache, sub, s)
+        lengths[s] = start_len
+        active[s] = True
+        slot_req[s] = [rid, rem]
+
+    def _prompt(rid: int, plen: int):
+        return jax.random.randint(jax.random.fold_in(key, 1000 + rid),
+                                  (1, plen), 0, cfg.vocab)
+
+    def _try_preempt(rid: int, g: int, need: int) -> bool:
+        """Free pages for the blocked head request by preempting the
+        live slot with the most remaining work (strictly more than the
+        head's whole generation — preemption must shorten the critical
+        path, not shuffle it)."""
+        victims = [(slot_req[s][1], s) for s in range(slots)
+                   if slot_req[s] is not None
+                   and slot_req[s][1] > g
+                   and preempt_count[slot_req[s][0]] < max_preemptions]
+        if not victims:
+            return False
+        _, v = max(victims)
+        vrid = slot_req[v][0]
+        freed_enough = (pool.available_pages + len(pool.owned_pages(v))
+                        >= pool.pages_for(need))
+        if not freed_enough:
+            return False
+        suspended[vrid] = {"tok": int(cur_tok[v, 0]),
+                           "done": len(outputs[vrid]),
+                           "rem": slot_req[v][1]}
+        pool.preempt(v)
+        resume_q.append(vrid)
+        preempt_count[vrid] += 1
+        slot_req[v] = None
+        active[v] = False
+        lengths[v] = 0
+        reg.counter("serve.preemptions").inc()
+        obs_trace.instant("serve.preempt", "serve", rid=vrid,
+                          done=suspended[vrid]["done"], for_rid=rid)
+        # hold the victim's pages for the head request across the
+        # host-side bookkeeping — nothing else may race them away
+        ok = pool.reserve(need)
+        assert ok, "preemption freed pages that reserve() cannot see"
+        return True
+
+    def admit() -> None:
+        nonlocal resumes
+        now = clk()
+        drain_arrivals(now)
+        reap(now)
+        live = sum(1 for sr in slot_req if sr is not None)
+        for s in range(slots):
+            if slot_req[s] is not None:
+                continue
+            if live >= max(1, int(policy.max_concurrency)):
+                break
+            if resume_q:
+                # resumes have strict priority: the request already spent
+                # its queueing budget once
+                rid = resume_q[0]
+                plen, g = requests[rid]
+                st = suspended[rid]
+                need = plen + g + decode_chunk
+                if not pool.can_admit(need):
+                    break                   # wait for an eviction
+                resume_q.popleft()
+                del suspended[rid]
+                pool.admit(s, need)
+                emitted = jnp.asarray(
+                    np.asarray(outputs[rid][:st["done"]], np.int32)[None])
+                seq = (jnp.concatenate([_prompt(rid, plen), emitted], axis=1)
+                       if st["done"] else _prompt(rid, plen))
+                _prefill_slot(s, rid, seq, st["tok"], plen + st["done"],
+                              st["rem"])
+                resumes += 1
+                reg.counter("serve.resumes").inc()
+                obs_trace.instant("serve.resume", "serve", rid=rid,
+                                  done=st["done"])
+            elif arrived:
+                rid, (plen, g) = arrived[0]
+                need = plen + g + decode_chunk
+                from_res = False
+                if not pool.can_admit(need):
+                    if not (preemption and _try_preempt(rid, g, need)):
+                        break               # wait for an eviction
+                    from_res = True
+                arrived.popleft()
+                ttft_dl = deadlines[rid][0]
+                if (ttft_dl is not None and policy.prefill_s > 0.0
+                        and now + policy.prefill_s
+                        > _arrival(rid) + ttft_dl):
+                    # stale: even an immediate prefill would miss TTFT
+                    if from_res:
+                        pool.cancel_reservation(need)
+                    _timeout(rid, "stale_at_admission", now)
+                    continue
+                pool.admit(s, need, from_reservation=from_res)
+                _prefill_slot(s, rid, _prompt(rid, plen), None, plen, g)
+                # the argmax above synced the prefill: the first output
+                # token exists NOW — that's the TTFT edge
+                done_t = clk()
+                first_tok_t[rid] = done_t
+                ttft_s[rid] = done_t - _arrival(rid)
+                reg.histogram("serve.ttft_s").record(max(ttft_s[rid], 0.0))
+                reg.counter("serve.admissions").inc()
+            else:
+                break
+            live += 1
         _gauges()
 
-    t0 = time.perf_counter()
+    def _complete(s: int, rid: int, now: float) -> None:
+        pool.evict(s)                       # pages recycle into the pool
+        slot_req[s] = None
+        active[s] = False
+        lengths[s] = 0
+        reg.counter("serve.evictions").inc()
+        g = requests[rid][1]
+        tpot_s[rid] = (now - first_tok_t[rid]) / max(1, g)
+        total_s[rid] = now - _arrival(rid)
+        policy.observe_tpot(tpot_s[rid])
+        reg.histogram("serve.tpot_s").record(max(tpot_s[rid], 0.0))
+        outcomes[rid] = COMPLETED
+        outcome_detail[rid] = None
+        reg.counter("serve.completed").inc()
+        ttft_dl, total_dl = deadlines[rid]
+        met = ((ttft_dl is None or ttft_s[rid] <= ttft_dl)
+               and (total_dl is None or total_s[rid] <= total_dl))
+        if met:
+            nonlocal good_tokens
+            good_tokens += g
+            reg.counter("serve.good_tokens").inc(g)
+        _finish_metrics(rid, now)
+        obs_trace.instant("serve.finish", "serve", rid=rid, gen=g)
+
+    def _shutdown(now: float) -> None:
+        """max_wall_s budget exhausted: everything still open terminates
+        with a typed outcome — nothing is left hanging."""
+        for s in range(slots):
+            if slot_req[s] is None:
+                continue
+            rid = slot_req[s][0]
+            pool.evict(s)
+            slot_req[s] = None
+            active[s] = False
+            lengths[s] = 0
+            outcomes[rid] = PREEMPTED
+            outcome_detail[rid] = "shutdown"
+        for rid in list(resume_q):
+            outcomes[rid] = PREEMPTED
+            outcome_detail[rid] = "shutdown"
+        resume_q.clear()
+        suspended.clear()
+        for rid, _ in list(arrived) + list(pending):
+            _reject(rid, "shutdown")
+        arrived.clear()
+        pending.clear()
+        obs_trace.instant("serve.shutdown", "serve", at_s=now - t0)
+
+    t0 = clk()
     admit()
-    while any(active) or queue:
+    while any(active) or arrived or resume_q or pending:
+        now = clk()
+        if max_wall_s is not None and now - t0 > max_wall_s:
+            _shutdown(now)
+            break
         if not any(active):
-            # open-loop idle gap: sleep until the head request arrives
-            rid_next = queue[0][0]
-            wait = t0 + arrival_s[rid_next] - time.perf_counter()
-            if wait > 0:
-                time.sleep(wait)
+            if not arrived and not resume_q and pending:
+                # open-loop idle gap: sleep until the head arrival (a
+                # virtual clock spins — the test clock advances itself)
+                wait = _arrival(pending[0][0]) - clk()
+                if real_time and wait > 0:
+                    time.sleep(wait)
             admit()
             continue
         peak_pages = max(peak_pages, (num_pages - 1) - pool.free_pages)
+        chunk_t0 = clk()
         with obs_trace.span("serve.decode_chunk", "serve",
                             live=int(active.sum()), chunk=decode_chunk):
             cache = {**cache,
@@ -303,7 +603,15 @@ def serve_continuous(arch: str, *, reduced: bool = True,
             toks, ntok, cache = loop_jit(params, jnp.asarray(cur_tok), cache)
             toks_h = np.asarray(toks)       # one transfer per chunk
         cur_tok = np.array(ntok)            # writable: admit() refills slots
-        harvest_t = time.perf_counter()
+        harvest_t = clk()
+        if watchdog_s is not None and harvest_t - chunk_t0 > watchdog_s:
+            # a stalled decode chunk starves every queued deadline: flag
+            # it and shed the queue entries the stall made hopeless
+            reg.counter("serve.stalls").inc()
+            obs_trace.instant("serve.stall", "serve",
+                              chunk_s=harvest_t - chunk_t0,
+                              live=int(active.sum()))
+            reap(harvest_t)
         for s in range(slots):
             if slot_req[s] is None:
                 continue
@@ -318,19 +626,21 @@ def serve_continuous(arch: str, *, reduced: bool = True,
             lengths[s] += decode_chunk      # mirrors the device increment
             slot_req[s][1] = rem - decode_chunk
             if slot_req[s][1] <= 0:
-                pool.evict(s)               # pages recycle into the pool
-                slot_req[s] = None
-                active[s] = False
-                lengths[s] = 0
-                reg.counter("serve.evictions").inc()
-                g = requests[rid][1]
-                tpot_s[rid] = ((harvest_t - first_tok_t[rid])
-                               / max(1, g))
-                reg.histogram("serve.tpot_s").record(max(tpot_s[rid], 0.0))
-                obs_trace.instant("serve.finish", "serve", rid=rid,
-                                  gen=g)
+                _complete(s, rid, harvest_t)
+            else:
+                total_dl = deadlines[rid][1]
+                if (total_dl is not None
+                        and harvest_t > _arrival(rid) + total_dl):
+                    # past its total deadline mid-decode: keep the
+                    # partial output, free the pages for live work
+                    pool.evict(s)
+                    slot_req[s] = None
+                    active[s] = False
+                    lengths[s] = 0
+                    reg.counter("serve.evictions").inc()
+                    _timeout(rid, "decode_past_deadline", harvest_t)
         admit()
-    wall = time.perf_counter() - t0
+    wall = clk() - t0
     _gauges()
 
     kv_bytes = sum(
@@ -344,10 +654,14 @@ def serve_continuous(arch: str, *, reduced: bool = True,
                                         page_size=None, bytes_per_el=el)
     ok = all(
         len(o) == g and all(0 <= t < cfg.vocab for t in o)
-        for (_, g), o in zip(requests, outputs)
+        for (rid, ((_, g), o)) in enumerate(zip(requests, outputs))
+        if outcomes[rid] == COMPLETED
     )
+    n_out = {k: sum(1 for o in outcomes if o == k) for k in OUTCOMES}
+    assert all(o is not None for o in outcomes), \
+        f"request without a terminal outcome: {outcomes}"
     return {
-        "arch": cfg.name, "requests": len(requests), "slots": slots,
+        "arch": cfg.name, "requests": n_req, "slots": slots,
         "page_size": page_size, "num_pages": num_pages,
         "generated": [len(o) for o in outputs],
         "tokens": outputs,
@@ -357,9 +671,16 @@ def serve_continuous(arch: str, *, reduced: bool = True,
         "kv_bytes_per_token_paged": kv_bytes / max(toks_done, 1),
         "kv_bytes_per_token_dense": dense_bpt,
         "peak_pages_in_use": peak_pages,
-        "pool_conserved": pool.free_pages == num_pages - 1,
-        "ttft_s": ttft_s, "tpot_s": tpot_s,
+        "pool_conserved": (pool.free_pages == num_pages - 1
+                           and pool.reserved_pages == 0),
+        "ttft_s": ttft_s, "tpot_s": tpot_s, "total_s": total_s,
         "arrival_s": arrival_s,
+        "outcomes": outcomes, "outcome_detail": outcome_detail,
+        "outcome_counts": n_out,
+        "preemptions": sum(preempt_count), "resumes": resumes,
+        "good_tokens": good_tokens,
+        "goodput_tok_per_s": good_tokens / max(wall, 1e-9),
+        "admission": policy.report(),
     }
 
 
@@ -398,14 +719,37 @@ def main() -> None:
                     help="TTFT p99 SLO in seconds (0 = no SLO trigger)")
     ap.add_argument("--tpot-slo", type=float, default=0.0,
                     help="TPOT p99 SLO in seconds (0 = no SLO trigger)")
+    ap.add_argument("--queue-bound", type=int, default=None,
+                    help="admission queue depth bound (reject past it; "
+                         "the --replan actuator retunes it)")
+    ap.add_argument("--max-concurrency", type=int, default=None,
+                    help="cap live decode slots below --batch")
+    ap.add_argument("--deadline-ttft", type=float, default=None,
+                    help="per-request TTFT deadline in seconds from "
+                         "arrival (enables deadline-aware admission)")
+    ap.add_argument("--deadline-total", type=float, default=None,
+                    help="per-request total deadline in seconds from "
+                         "arrival")
+    ap.add_argument("--preemption", action="store_true",
+                    help="preempt-and-resume when the page pool blocks "
+                         "the arrived head request")
+    ap.add_argument("--watchdog", type=float, default=None,
+                    help="decode-chunk stall threshold in seconds "
+                         "(stall => obs instant + queue shed pass)")
     args = ap.parse_args()
     if args.obs_dir:
         obs.configure(run_dir=args.obs_dir)
     controller = None
+    policy = None
+    if args.continuous:
+        policy = AdmissionPolicy(slots=args.batch,
+                                 queue_bound=args.queue_bound,
+                                 max_concurrency=args.max_concurrency)
     if args.replan and args.continuous:
         from repro.core.cost_model import TrainingJob
         from repro.core.profiles import ctrdnn_layers
-        from repro.core.replan import ReplanConfig, ReplanController
+        from repro.core.replan import (AdmissionActuator, ReplanConfig,
+                                       ReplanController)
         from repro.core.resources import default_fleet
         from repro.core.schedulers.rl import RLScheduler
         from repro.obs.bridge import snapshot_resources
@@ -419,11 +763,19 @@ def main() -> None:
             snapshot_fn=lambda: snapshot_resources(rfleet[0]),
             config=ReplanConfig(window_s=args.replan_window_s,
                                 ttft_slo_s=args.ttft_slo,
-                                tpot_slo_s=args.tpot_slo))
+                                tpot_slo_s=args.tpot_slo),
+            admission=AdmissionActuator(policy,
+                                        ttft_slo_s=args.ttft_slo))
         controller.start()
     if args.continuous:
+        deadlines = None
+        if args.deadline_ttft is not None or args.deadline_total is not None:
+            deadlines = (args.deadline_ttft, args.deadline_total)
         out = serve_continuous(args.arch, reduced=args.reduced,
-                               slots=args.batch)
+                               slots=args.batch, admission=policy,
+                               deadlines=deadlines,
+                               preemption=args.preemption,
+                               watchdog_s=args.watchdog)
     else:
         out = serve(args.arch, reduced=args.reduced, batch=args.batch,
                     prompt_len=args.prompt_len, gen=args.gen,

@@ -66,8 +66,18 @@ def _serve_signals(registry=None) -> dict:
         "evictions": reg.value("serve.evictions"),
         "admissions": reg.value("serve.admissions"),
         "tokens": reg.value("serve.tokens"),
+        # overload-robustness outcome counters (PR 10) — the admission
+        # actuator's breach/health inputs
+        "completed": reg.value("serve.completed"),
+        "rejected": reg.value("serve.rejected"),
+        "timed_out": reg.value("serve.timed_out"),
+        "preemptions": reg.value("serve.preemptions"),
+        "resumes": reg.value("serve.resumes"),
+        "good_tokens": reg.value("serve.good_tokens"),
+        "stalls": reg.value("serve.stalls"),
     }
-    for name, key in (("serve.ttft_s", "ttft"), ("serve.tpot_s", "tpot")):
+    for name, key in (("serve.ttft_s", "ttft"), ("serve.tpot_s", "tpot"),
+                      ("serve.deadline_slack_s", "deadline_slack")):
         hists = [h for _, h in reg.find(name)]
         if not hists:
             continue
@@ -193,6 +203,19 @@ class SnapshotDelta:
     dead_shards: int
     fleet_events: int            #: lifecycle events (join/leave/kill/
     #: detected/recover/restore) that fired inside the window
+    # overload-robustness outcome deltas (PR 10) — defaulted so snapshots
+    # taken before the serve loop ran (or by older callers) still diff
+    completed: float = 0.0       #: requests completed in the window
+    rejected: float = 0.0       #: admission rejections in the window
+    timed_out: float = 0.0       #: deadline timeouts in the window
+    preempted: float = 0.0       #: slot preemptions in the window
+    resumed: float = 0.0        #: preempted requests resumed in-window
+    good_tokens: float = 0.0     #: deadline-met tokens in the window
+
+    @property
+    def goodput_tok_per_s(self) -> float:
+        """Windowed deadline-met tokens per second (0.0 = none)."""
+        return self.good_tokens / self.seconds if self.seconds > 0 else 0.0
 
     @property
     def ingest_bw(self) -> float:
@@ -263,6 +286,13 @@ def snapshot_delta(prev: dict, cur: dict, seconds: float) -> SnapshotDelta:
         ps_degraded=bool(health["degraded"]) if health else False,
         dead_shards=len(health["dead_shards"]) if health else 0,
         fleet_events=ev_cur - ev_prev,
+        # .get(): hand-built snapshot dicts predating PR 10 lack these
+        completed=cs.get("completed", 0.0) - ps_.get("completed", 0.0),
+        rejected=cs.get("rejected", 0.0) - ps_.get("rejected", 0.0),
+        timed_out=cs.get("timed_out", 0.0) - ps_.get("timed_out", 0.0),
+        preempted=cs.get("preemptions", 0.0) - ps_.get("preemptions", 0.0),
+        resumed=cs.get("resumes", 0.0) - ps_.get("resumes", 0.0),
+        good_tokens=cs.get("good_tokens", 0.0) - ps_.get("good_tokens", 0.0),
     )
 
 

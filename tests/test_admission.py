@@ -1,0 +1,291 @@
+"""Overload-robust serving: deadline-aware admission, load shedding,
+preempt-and-resume (PR 10).
+
+Pins the robustness contract of ``serve_continuous``:
+  * every request terminates in exactly one typed outcome — nothing
+    hangs, including oversize requests and wall-budget shutdown;
+  * the ``AdmissionPolicy`` math rejects only provable deadline misses
+    and bounds the admission queue;
+  * deadline enforcement (queued reap, mid-decode eviction) is
+    deterministic under an injected virtual clock;
+  * a preempted-then-resumed sequence emits a token stream bit-exact
+    vs an un-preempted run — checked end-to-end through the serve loop
+    AND at the decoder level for a mid-flight (chunk-boundary) cut;
+  * the watchdog flags stalled decode chunks without killing the loop.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.core.admission import (AdmissionPolicy, COMPLETED, OUTCOMES,
+                                  PREEMPTED, REJECTED, TIMED_OUT)
+from repro.models import decoder as dec
+
+KEY = jax.random.PRNGKey(0)
+ARCH = "llama3.2-1b"
+
+
+def ticking_clock(dt=0.01, start=0.0):
+    """A virtual clock advancing ``dt`` per call — the serve loop's
+    ``clock=`` seam; makes arrival/deadline behaviour deterministic."""
+    state = {"t": start}
+
+    def clk():
+        state["t"] += dt
+        return state["t"]
+
+    return clk
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registry():
+    obs.REGISTRY.reset()
+    prev = obs.REGISTRY.enabled
+    obs.REGISTRY.enabled = True
+    yield
+    obs.REGISTRY.enabled = prev
+    obs.REGISTRY.reset()
+
+
+class TestAdmissionPolicy:
+    def test_unmeasured_rates_admit_everything(self):
+        p = AdmissionPolicy(slots=2)
+        assert p.admit_check(now=5.0, arrival=0.0, gen=1000,
+                             ttft_deadline=0.001,
+                             total_deadline=0.001) is None
+        assert p.admitted == 1
+
+    def test_queue_bound_rejects(self):
+        p = AdmissionPolicy(slots=2, queue_bound=3)
+        assert p.admit_check(now=0.0, arrival=0.0, gen=4,
+                             queue_len=2) is None
+        assert p.admit_check(now=0.0, arrival=0.0, gen=4,
+                             queue_len=3) == "queue_full"
+        assert p.rejections == {"queue_full": 1}
+
+    def test_ttft_deadline_provable_miss(self):
+        # τ=0.1 s/tok, c=2 → backlog of 40 tokens waits 2.0 s ≥ 0.5 s ttft
+        p = AdmissionPolicy(slots=2, tpot_s=0.1, prefill_s=0.05)
+        assert p.admit_check(now=1.0, arrival=1.0, gen=4,
+                             ttft_deadline=0.5,
+                             backlog_tokens=40) == "ttft_deadline"
+        # no backlog: 0.05 s prefill fits easily
+        assert p.admit_check(now=1.0, arrival=1.0, gen=4,
+                             ttft_deadline=0.5, backlog_tokens=0) is None
+
+    def test_total_deadline_provable_miss(self):
+        p = AdmissionPolicy(slots=1, tpot_s=0.1)
+        # 0 backlog but 20 tokens at 0.1 s/tok = 2.0 s > 1.0 s total
+        assert p.admit_check(now=0.0, arrival=0.0, gen=20,
+                             total_deadline=1.0) == "total_deadline"
+        assert p.admit_check(now=0.0, arrival=0.0, gen=5,
+                             total_deadline=1.0) is None
+
+    def test_elapsed_queue_time_counts_against_deadline(self):
+        p = AdmissionPolicy(slots=1, tpot_s=0.01)
+        # arrived 0.9 s ago with a 1.0 s ttft deadline: even zero backlog
+        # leaves only 0.1 s — prefill EMA 0.2 s makes it a provable miss
+        p.prefill_s = 0.2
+        assert p.admit_check(now=0.9, arrival=0.0, gen=2,
+                             ttft_deadline=1.0) == "ttft_deadline"
+
+    def test_ema_measurement_feedback(self):
+        p = AdmissionPolicy(slots=1, ema=0.5)
+        p.observe_tpot(0.2)
+        assert p.tpot_s == pytest.approx(0.2)   # first sample seeds
+        p.observe_tpot(0.4)
+        assert p.tpot_s == pytest.approx(0.3)
+        p.observe_prefill(1.0)
+        assert p.prefill_s == pytest.approx(1.0)
+        rep = p.report()
+        assert rep["tpot_s"] == pytest.approx(0.3)
+
+    def test_concurrency_clamped_to_slots(self):
+        p = AdmissionPolicy(slots=4, max_concurrency=100)
+        assert p.concurrency == 4
+        p.max_concurrency = 0
+        assert p.concurrency == 1
+
+
+class TestDeadlineEnforcement:
+    def test_queued_request_times_out_deterministically(self):
+        """slots=1: the second request queues behind a long generation;
+        its TTFT deadline passes on the virtual clock → ``timed_out``
+        with the queued-reap detail, and a slack histogram sample."""
+        from repro.launch.serve import serve_continuous
+
+        out = serve_continuous(
+            ARCH, slots=1, page_size=8, decode_chunk=4,
+            requests=[(5, 16), (5, 4)],
+            deadlines=[(None, None), (0.05, None)],
+            clock=ticking_clock(dt=0.01))
+        assert out["outcomes"] == [COMPLETED, TIMED_OUT]
+        assert out["outcome_detail"][1] == "queued_past_deadline"
+        assert out["outcome_counts"]["timed_out"] == 1
+        assert out["pool_conserved"]
+        assert obs.REGISTRY.value("serve.timed_out") == 1
+        # the miss recorded a (negative) deadline-slack sample
+        hists = [h for _, h in obs.REGISTRY.find("serve.deadline_slack_s")]
+        assert hists and hists[0].snapshot()["count"] >= 1
+
+    def test_mid_decode_total_deadline_evicts_with_partial_output(self):
+        from repro.launch.serve import serve_continuous
+
+        out = serve_continuous(
+            ARCH, slots=1, page_size=8, decode_chunk=4,
+            requests=[(5, 64)],
+            deadlines=[(None, 0.5)],
+            clock=ticking_clock(dt=0.01))
+        assert out["outcomes"] == [TIMED_OUT]
+        assert out["outcome_detail"][0] == "decode_past_deadline"
+        # partial output kept, in whole chunks, short of the full 64
+        assert 0 < out["generated"][0] < 64
+        assert out["generated"][0] % 4 == 0
+        assert out["pool_conserved"]
+
+    def test_max_wall_budget_terminates_everything_typed(self):
+        from repro.launch.serve import serve_continuous
+
+        out = serve_continuous(
+            ARCH, slots=2, page_size=8, decode_chunk=4,
+            requests=[(5, 400), (5, 400), (5, 4), (5, 4)],
+            max_wall_s=0.3, clock=ticking_clock(dt=0.01))
+        assert all(o in OUTCOMES for o in out["outcomes"])
+        assert PREEMPTED in out["outcomes"]     # in-flight at shutdown
+        assert "shutdown" in [d for d in out["outcome_detail"]
+                              if d is not None]
+        assert out["pool_conserved"]
+
+    def test_queue_bound_rejection_end_to_end(self):
+        from repro.launch.serve import serve_continuous
+
+        out = serve_continuous(
+            ARCH, slots=1, page_size=8, decode_chunk=4,
+            requests=[(5, 8)] * 4,
+            admission=AdmissionPolicy(slots=1, queue_bound=1),
+            clock=ticking_clock(dt=0.01))
+        assert out["outcomes"][0] == COMPLETED
+        assert REJECTED in out["outcomes"]
+        assert "queue_full" in out["outcome_detail"]
+        assert out["admission"]["rejections"].get("queue_full", 0) >= 1
+        assert obs.REGISTRY.value("serve.rejected") >= 1
+
+
+class TestPreemptResume:
+    def test_preempt_resume_bit_exact_end_to_end(self):
+        """r1 (small) blocked on pages preempts r0 (large remaining);
+        r0 later resumes via prompt+generated prefill — both streams
+        bit-exact vs solo un-preempted runs through the same loop."""
+        from repro.launch.serve import serve_continuous
+
+        kw = dict(page_size=4, decode_chunk=4, max_seq_len=36, num_pages=13)
+        out = serve_continuous(ARCH, slots=2, requests=[(8, 24), (8, 4)],
+                               preemption=True, **kw)
+        assert out["outcomes"] == [COMPLETED, COMPLETED]
+        assert out["preemptions"] >= 1 and out["resumes"] >= 1
+        assert out["pool_conserved"]
+        assert obs.REGISTRY.value("serve.preemptions") >= 1
+        assert obs.REGISTRY.value("serve.resumes") >= 1
+        # rid=0's prompt derives from fold_in(key, 1000+rid): a solo run
+        # of the same request at rid=0 is the un-preempted reference
+        solo = serve_continuous(ARCH, slots=1, requests=[(8, 24)], **kw)
+        assert out["tokens"][0] == solo["tokens"][0]
+        assert out["generated"] == [24, 4]
+
+    def test_mid_flight_resume_bit_exact_decoder_level(self):
+        """The serve loop's resume math, pinned deterministically at the
+        decoder: cut after one decode chunk (the only place the loop can
+        preempt), resume by prefilling prompt+emitted and feeding the
+        SAVED next-token — the joined stream equals the uncut decode."""
+        cfg = get_config(ARCH, reduced=True)
+        params = dec.init_model(cfg, KEY)
+        plen, chunk, total = 8, 4, 12
+        prompt = jax.random.randint(jax.random.fold_in(KEY, 1000), (1, plen),
+                                    0, cfg.vocab)
+
+        def fresh():
+            cache = dec.init_cache(cfg, 1, 32, dtype=jnp.float32)
+            lg, cache = dec.prefill(params, cfg, prompt, cache,
+                                    compute_dtype=jnp.float32)
+            tok = jnp.argmax(lg[:, -1:, :cfg.vocab], -1).astype(jnp.int32)
+            return tok, cache
+
+        tok, cache = fresh()
+        want, _, _ = dec.decode_loop(params, cfg, tok, cache,
+                                     jnp.int32(plen), total,
+                                     compute_dtype=jnp.float32)
+        want = np.asarray(want)[0].tolist()
+
+        # un-preempted first chunk: emits 4 tokens + the saved next-token
+        tok, cache = fresh()
+        emitted, ntok, _ = dec.decode_loop(params, cfg, tok, cache,
+                                           jnp.int32(plen), chunk,
+                                           compute_dtype=jnp.float32)
+        emitted = np.asarray(emitted)[0].tolist()
+        saved_tok = int(np.asarray(ntok)[0, 0])   # what the loop suspends
+
+        # resume: fresh cache, prefill prompt+emitted, feed saved token
+        # (NOT the argmax of the resume prefill — that would re-emit
+        # emitted[-1]'s successor one step early)
+        seq = jnp.concatenate(
+            [prompt, jnp.asarray(emitted, jnp.int32)[None]], axis=1)
+        cache = dec.init_cache(cfg, 1, 32, dtype=jnp.float32)
+        _, cache = dec.prefill(params, cfg, seq, cache,
+                               compute_dtype=jnp.float32)
+        rest, _, _ = dec.decode_loop(
+            params, cfg, jnp.asarray([[saved_tok]], jnp.int32), cache,
+            jnp.int32(plen + chunk), total - chunk,
+            compute_dtype=jnp.float32)
+        got = emitted + np.asarray(rest)[0].tolist()
+        assert got == want
+
+    def test_preemption_off_blocks_instead(self):
+        """Same pressure without ``preemption=True``: the blocked head
+        waits for the eviction (legacy behaviour), nothing is preempted."""
+        from repro.launch.serve import serve_continuous
+
+        out = serve_continuous(ARCH, slots=2, page_size=4, decode_chunk=4,
+                               requests=[(8, 24), (8, 4)],
+                               max_seq_len=36, num_pages=13)
+        assert out["outcomes"] == [COMPLETED, COMPLETED]
+        assert out["preemptions"] == 0 and out["resumes"] == 0
+
+
+class TestWatchdog:
+    def test_stall_detection_flags_and_continues(self):
+        from repro.launch.serve import serve_continuous
+
+        # every real decode chunk exceeds a 1 ns threshold: the watchdog
+        # fires per chunk yet the loop still completes every request
+        out = serve_continuous(ARCH, slots=2, page_size=8, decode_chunk=4,
+                               requests=[(5, 8), (7, 8)], watchdog_s=1e-9)
+        assert out["outcomes"] == [COMPLETED, COMPLETED]
+        assert obs.REGISTRY.value("serve.stalls") >= 1
+
+
+class TestGoodputAccounting:
+    def test_deadline_met_tokens_count_as_good(self):
+        from repro.launch.serve import serve_continuous
+
+        out = serve_continuous(ARCH, slots=2, page_size=8, decode_chunk=4,
+                               requests=[(5, 4), (7, 6)],
+                               deadlines=(1e9, 1e9))
+        assert out["outcomes"] == [COMPLETED, COMPLETED]
+        assert out["good_tokens"] == 10
+        assert out["goodput_tok_per_s"] > 0
+        assert obs.REGISTRY.value("serve.good_tokens") == 10
+
+    def test_missed_deadline_tokens_are_not_good(self):
+        from repro.launch.serve import serve_continuous
+
+        # impossible total deadline on the virtual clock: the request is
+        # reaped or evicted — zero good tokens either way
+        out = serve_continuous(ARCH, slots=1, page_size=8, decode_chunk=4,
+                               requests=[(5, 32)], deadlines=[(None, 0.02)],
+                               clock=ticking_clock(dt=0.01))
+        assert out["good_tokens"] == 0
+        assert out["outcomes"][0] == TIMED_OUT

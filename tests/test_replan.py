@@ -405,3 +405,133 @@ def test_merge_histograms_matches_single():
     assert obs_metrics.merge_histograms([]) == {
         "count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0, "max": 0.0,
         "p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+# --- admission actuator (PR 10) -------------------------------------------
+
+def adelta(**kw):
+    """A SnapshotDelta with every field zeroed except the overrides —
+    the actuator consumes deltas directly, no snapshots needed."""
+    base = dict(seconds=5.0, pull_bytes=0.0, push_bytes=0.0,
+                pull_seconds=0.0, push_seconds=0.0, tokens=0.0,
+                queue_depth=0.0, queue_growth=0.0, ttft=None, tpot=None,
+                ttft_completed=0.0, tpot_completed=0.0, ps_degraded=False,
+                dead_shards=0, fleet_events=0)
+    base.update(kw)
+    return bridge.SnapshotDelta(**base)
+
+
+def make_actuator(**kw):
+    from repro.core.admission import AdmissionPolicy
+    from repro.core.replan import AdmissionActuator
+
+    policy = AdmissionPolicy(slots=kw.pop("slots", 4),
+                             queue_bound=kw.pop("queue_bound", 8))
+    return AdmissionActuator(policy, ttft_slo_s=kw.pop("ttft_slo_s", 0.1),
+                             **kw), policy
+
+
+def test_actuator_breach_decreases_queue_bound_first():
+    act, policy = make_actuator()
+    d = act.tune(adelta(ttft={"count": 5, "p99": 0.5}, ttft_completed=5.0,
+                        completed=5.0))
+    assert d["action"] == "decrease" and d["ttft_breach"]
+    assert policy.queue_bound == 4           # multiplicative halving
+    assert policy.max_concurrency == 4       # untouched on first breach
+
+
+def test_actuator_consecutive_breaches_cut_concurrency():
+    act, policy = make_actuator(concurrency_after=2)
+    breach = adelta(timed_out=3.0)           # timeouts breach without p99
+    act.tune(breach)
+    assert policy.max_concurrency == 4
+    d = act.tune(breach)
+    assert d["breach_streak"] == 2
+    assert policy.max_concurrency == 2
+    assert policy.queue_bound == 2           # halved twice: 8 -> 4 -> 2
+
+
+def test_actuator_healthy_windows_recover_additively():
+    act, policy = make_actuator()
+    act.tune(adelta(timed_out=1.0))
+    act.tune(adelta(timed_out=1.0))
+    assert (policy.queue_bound, policy.max_concurrency) == (2, 2)
+    for _ in range(10):
+        act.tune(adelta(completed=4.0, good_tokens=16.0,
+                        ttft={"count": 4, "p99": 0.01}, ttft_completed=4.0))
+    # climbed back to the ceilings, +1 per healthy window
+    assert policy.queue_bound == 8
+    assert policy.max_concurrency == 4       # capped at slots
+    assert act.report()["breaches"] == 2
+
+
+def test_actuator_idle_window_is_a_no_op():
+    act, policy = make_actuator()
+    assert act.tune(adelta()) is None
+    assert (policy.queue_bound, policy.max_concurrency) == (8, 4)
+
+
+def test_actuator_healthy_resets_breach_streak():
+    act, policy = make_actuator(concurrency_after=2)
+    act.tune(adelta(timed_out=1.0))
+    act.tune(adelta(completed=2.0))          # healthy: streak resets
+    act.tune(adelta(timed_out=1.0))          # 1st of a NEW streak
+    assert policy.max_concurrency == 4       # never cut
+
+
+def test_actuator_unbounded_policy_gets_finite_ceiling():
+    from repro.core.admission import AdmissionPolicy
+    from repro.core.replan import AdmissionActuator
+
+    policy = AdmissionPolicy(slots=4)        # queue_bound=None
+    act = AdmissionActuator(policy, ttft_slo_s=0.1)
+    assert act.max_queue_bound == 32         # 8 * slots
+    act.tune(adelta(timed_out=1.0))
+    assert policy.queue_bound == 16          # bounded from the ceiling
+
+
+def test_actuator_floors_hold_under_sustained_breach():
+    act, policy = make_actuator(min_queue_bound=1, min_concurrency=1,
+                                concurrency_after=1)
+    for _ in range(10):
+        act.tune(adelta(timed_out=1.0))
+    assert policy.queue_bound == 1
+    assert policy.max_concurrency == 1       # never 0: progress possible
+
+
+def test_controller_tunes_admission_each_window():
+    """The controller feeds every windowed delta to the actuator —
+    independent of drift hysteresis/cooldown gating — and reports it."""
+    from repro.core.admission import AdmissionPolicy
+    from repro.core.replan import AdmissionActuator
+
+    policy = AdmissionPolicy(slots=4, queue_bound=8)
+    act = AdmissionActuator(policy, ttft_slo_s=0.1)
+    sched = FakeScheduler(alt=(1,) * len(SPECS), factor=1.0)
+    clock = {"t": 0.0}
+    initial = tuple(0 if k in ("embedding", "nce") else 1
+                    for k, *_ in SPECS)
+    ctl = ReplanController(SPECS, FLEET, JOB, sched,
+                           snapshot_fn=lambda: None,
+                           config=ReplanConfig(window_steps=1),
+                           clock=lambda: clock["t"], initial=initial,
+                           admission=act)
+
+    def observe(s):
+        clock["t"] += 5.0
+        return ctl.observe(snapshot=s)
+
+    s0 = snap(tokens=10.0)
+    s1 = snap(tokens=20.0)
+    s1["serve"]["timed_out"] = 2.0           # breach window
+    s2 = snap(tokens=30.0)
+    s2["serve"]["timed_out"] = 2.0           # cumulative: no new timeouts
+    s2["serve"]["completed"] = 3.0           # healthy window
+    observe(s0)
+    observe(s1)
+    assert policy.queue_bound == 4           # breach acted on immediately
+    observe(s2)
+    assert policy.queue_bound == 5           # healthy: additive recovery
+    rep = ctl.report()
+    assert rep["admission"]["breaches"] == 1
+    assert len(rep["admission"]["decisions"]) == 2

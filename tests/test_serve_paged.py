@@ -306,12 +306,26 @@ class TestServeEndToEnd:
             assert out["tokens"][rid] == np.asarray(want)[0].tolist()
 
     def test_serve_continuous_rejects_oversize_request(self):
+        """A request the pool cannot hold even when empty must terminate
+        with a typed ``rejected`` outcome (PR 10) — not hang waiting for
+        an eviction that cannot help, and not crash the serve loop."""
         from repro.launch.serve import serve_continuous
 
-        with pytest.raises(RuntimeError, match="pages_per_seq"):
-            serve_continuous("llama3.2-1b", slots=2, page_size=8,
-                             decode_chunk=4, requests=[(40, 10)],
-                             max_seq_len=32)
+        out = serve_continuous("llama3.2-1b", slots=2, page_size=8,
+                               decode_chunk=4, requests=[(40, 10), (5, 4)],
+                               max_seq_len=32)
+        assert out["outcomes"] == ["rejected", "completed"]
+        assert "pages_per_seq" in out["outcome_detail"][0]
+        assert out["outcome_counts"]["rejected"] == 1
+        assert out["pool_conserved"]
+
+    def test_serve_continuous_rejects_decreasing_arrivals(self):
+        from repro.launch.serve import serve_continuous
+
+        with pytest.raises(ValueError, match="non-decreasing"):
+            serve_continuous("llama3.2-1b", slots=2,
+                             requests=[(5, 4), (5, 4)],
+                             arrival_s=[1.0, 0.5])
 
 
 class TestPagePoolInvariants:
@@ -359,6 +373,105 @@ class TestPagePoolInvariants:
             pool.evict(s)
         self._check(pool)
         assert pool.free_pages == pool.num_pages - 1
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_random_preempt_reserve_interleavings(self, seed):
+        """Any admit/preempt/resume(admit-from-reservation)/evict/reserve/
+        cancel interleaving conserves the free list AND the reservation
+        watermark: pages withheld by ``reserve`` are invisible to other
+        admissions and to ``grow``, and every page comes back on evict."""
+        import random
+
+        rng = random.Random(seed)
+        slots, ps, pps = rng.randint(1, 4), rng.choice([2, 4, 8]), 8
+        pool = PagePool(rng.randint(4, 40), ps, slots, pps)
+        live: dict[int, int] = {}
+        reservations: list[int] = []   # outstanding reserve() token counts
+
+        def check():
+            self._check(pool)
+            want_res = sum(pool.pages_for(t) for t in reservations)
+            assert pool.reserved_pages == want_res
+            assert 0 <= pool.reserved_pages <= pool.free_pages
+            assert pool.available_pages == \
+                pool.free_pages - pool.reserved_pages
+
+        for _ in range(40):
+            op = rng.random()
+            s = rng.randrange(slots)
+            if op < 0.30 and s not in live:
+                want = rng.randint(1, ps * pps)
+                if reservations and rng.random() < 0.5:
+                    # resume path: consume an outstanding reservation
+                    want = reservations.pop()
+                    if pool.can_admit(want, from_reservation=True):
+                        pool.admit(s, want, from_reservation=True)
+                        live[s] = want
+                    else:  # shouldn't happen: reserve() guaranteed pages
+                        raise AssertionError("reservation not honoured")
+                elif pool.can_admit(want):
+                    pool.admit(s, want)
+                    live[s] = want
+            elif op < 0.45 and s in live:
+                want = min(ps * pps, live[s] + rng.randint(0, 2 * ps))
+                try:
+                    pool.grow(s, want)
+                    live[s] = max(live[s], want)
+                except MemoryError:
+                    pass  # exhausted/withheld pool keeps prior state
+            elif op < 0.60 and s in live:
+                freed = pool.preempt(s)
+                assert freed == pool.pages_for(live[s])
+                del live[s]
+            elif op < 0.75:
+                want = rng.randint(1, ps * pps)
+                if pool.reserve(want):
+                    reservations.append(want)
+            elif op < 0.85 and reservations:
+                pool.cancel_reservation(reservations.pop())
+            elif s in live:
+                pool.evict(s)
+                del live[s]
+            check()
+        for t in reservations:
+            pool.cancel_reservation(t)
+        reservations.clear()
+        for s in list(live):
+            pool.evict(s)
+        check()
+        assert pool.free_pages == pool.num_pages - 1
+        assert pool.reserved_pages == 0
+
+    def test_reserve_withholds_pages_from_admission_and_grow(self):
+        pool = PagePool(8, 4, 2, 4)   # 7 allocatable
+        assert pool.reserve(16)       # 4 pages withheld
+        assert pool.available_pages == 3
+        assert not pool.can_admit(16)             # 4 > 3 available
+        assert pool.can_admit(16, from_reservation=True)
+        pool.admit(0, 12)                         # 3 pages: exactly fits
+        with pytest.raises(MemoryError):
+            pool.grow(0, 16)          # 4th page exists but is withheld
+        pool.admit(1, 16, from_reservation=True)  # consumes the hold
+        assert pool.reserved_pages == 0
+        pool.evict(1)                 # pages return unreserved
+        pool.grow(0, 16)              # no watermark left: grow succeeds
+
+    def test_cancel_more_than_reserved_raises(self):
+        pool = PagePool(8, 4, 2, 4)
+        assert pool.reserve(4)
+        with pytest.raises(ValueError):
+            pool.cancel_reservation(8)
+        pool.cancel_reservation(4)
+        assert pool.reserved_pages == 0
+
+    def test_preempt_returns_pages_and_counts(self):
+        pool = PagePool(8, 4, 2, 4)
+        pool.admit(0, 10)             # 3 pages
+        assert pool.preempt(0) == 3
+        assert pool.free_pages == 7 and pool.preempt_count == 1
+        with pytest.raises(ValueError):
+            pool.preempt(0)           # not live any more
 
     def test_double_admit_rejected(self):
         pool = PagePool(8, 4, 2, 4)
